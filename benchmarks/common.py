@@ -1,0 +1,149 @@
+"""Shared benchmark harness: presets, grid runner, ASCII plots, artifacts."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    ALGORITHMS,
+    Cluster,
+    Rates,
+    SimConfig,
+    simulate_grid,
+)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+ALGO_LABELS = {
+    "fcfs": "FCFS",
+    "jsq_priority": "JSQ-Priority",
+    "jsq_maxweight": "JSQ-MaxWeight",
+    "jsq_maxweight_pod": "JSQ-MaxWeight-Pod (d'=12)",
+    "balanced_pandas": "Balanced-Pandas",
+    "balanced_pandas_pod": "Balanced-Pandas-Pod (d=8)",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    name: str
+    cluster: Cluster
+    rates: Rates
+    cfg: SimConfig
+    loads: tuple
+    high_loads: tuple
+    fixed_load: float
+    n_seeds: int
+
+
+QUICK = Preset(
+    name="quick",
+    cluster=Cluster(M=100, K=10),
+    rates=Rates(0.04, 0.02, 0.008),
+    cfg=SimConfig(T=12_000, warmup=3_000, route_mode="sequential"),
+    loads=(0.3, 0.5, 0.7, 0.8, 0.9, 0.95),
+    high_loads=(0.85, 0.9, 0.95),
+    fixed_load=0.9,
+    n_seeds=2,
+)
+
+# paper §V scale: 500 servers, 10 racks of 50; finer slots (1% of local
+# service time) so the discrete-time slotting approximates continuous time.
+PAPER = Preset(
+    name="paper",
+    cluster=Cluster(M=500, K=10),
+    rates=Rates(0.01, 0.005, 0.002),
+    cfg=SimConfig(T=40_000, warmup=10_000, route_mode="sequential"),
+    loads=(0.3, 0.5, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95),
+    high_loads=(0.85, 0.9, 0.95),
+    fixed_load=0.9,
+    n_seeds=4,
+)
+
+
+def preset_from_argv() -> Preset:
+    return PAPER if "--preset=paper" in sys.argv or "paper" in sys.argv[1:] \
+        else QUICK
+
+
+def run_figure(preset: Preset, loads, service_dist: str, name: str,
+               algos=ALGORITHMS) -> dict:
+    """Mean task completion time (units of mean local service) per algo x
+    load; the harness behind every fig2-fig7 reproduction."""
+    cfg = dataclasses.replace(preset.cfg, service_dist=service_dist)
+    rows = {}
+    timing = {}
+    for algo in algos:
+        t0 = time.time()
+        res = simulate_grid(algo, preset.cluster, preset.rates, list(loads),
+                            preset.n_seeds, cfg)
+        t = np.asarray(res.mean_completion_norm)       # [seeds, loads]
+        drift = np.asarray(res.drift)
+        rows[algo] = {
+            "mean": t.mean(axis=0).tolist(),
+            "sem": (t.std(axis=0) / max(np.sqrt(t.shape[0]), 1)).tolist(),
+            "drift": drift.mean(axis=0).tolist(),
+            "locality": np.asarray(res.locality_fractions).mean(axis=0).tolist(),
+        }
+        timing[algo] = time.time() - t0
+    out = {"figure": name, "preset": preset.name, "loads": list(loads),
+           "service_dist": service_dist, "algos": rows,
+           "wall_s": timing}
+    save_artifact(name, out)
+    return out
+
+
+def save_artifact(name: str, obj: dict):
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def ascii_plot(out: dict, width: int = 64, height: int = 16,
+               logy: bool = True) -> str:
+    """Completion time vs load, one glyph per algorithm."""
+    loads = out["loads"]
+    glyphs = "BPMJQF"
+    series = {}
+    for g, (algo, row) in zip(glyphs, reversed(list(out["algos"].items()))):
+        series[g] = (algo, np.array(row["mean"]))
+    allv = np.concatenate([v for _, v in series.values()])
+    allv = allv[np.isfinite(allv) & (allv > 0)]
+    lo, hi = allv.min(), allv.max()
+    f = np.log if logy else (lambda x: x)
+    span = max(f(hi) - f(lo), 1e-9)
+    grid = [[" "] * width for _ in range(height)]
+    for g, (algo, v) in series.items():
+        for i, (x, y) in enumerate(zip(loads, v)):
+            if not np.isfinite(y) or y <= 0:
+                continue
+            col = int((x - loads[0]) / max(loads[-1] - loads[0], 1e-9)
+                      * (width - 1))
+            row = int((f(y) - f(lo)) / span * (height - 1))
+            grid[height - 1 - row][col] = g
+    lines = ["".join(r) for r in grid]
+    legend = "  ".join(f"{g}={ALGO_LABELS[a]}" for g, (a, _) in series.items())
+    hdr = (f"mean completion time (x mean local service), "
+           f"{'log' if logy else 'lin'} scale {lo:.2f}..{hi:.2f}; "
+           f"load {loads[0]}..{loads[-1]}")
+    return "\n".join([hdr] + lines + [legend])
+
+
+def print_table(out: dict):
+    loads = out["loads"]
+    print(f"\n== {out['figure']} ({out['preset']} preset, "
+          f"{out['service_dist']} service) ==")
+    print(f"{'algorithm':28s} " + " ".join(f"rho={l:<5}" for l in loads))
+    for algo, row in out["algos"].items():
+        cells = []
+        for m, d in zip(row["mean"], row["drift"]):
+            cells.append(f"{m:8.2f}{'*' if d > 1.5 else ' '}")
+        print(f"{ALGO_LABELS[algo]:28s} " + " ".join(cells))
+    print("(* = unstable: tasks-in-system still growing at end of run)")

@@ -1,0 +1,79 @@
+"""Load-balancing complexity: the paper's O(M) -> O(1) claim (§IV-C).
+
+Two measurements:
+  1. Probes per decision (information the central scheduler must fetch):
+     Balanced-Pandas touches M workloads per routing decision;
+     Balanced-Pandas-Pod touches 3 + d.  For M=500, d=8: 2.2%.
+  2. Wall-clock routing throughput of the two kernel-backed router paths
+     (weighted_argmin vs pod_route) as M grows — the O(M) scan's cost per
+     decision grows linearly while Pod routing stays flat.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import preset_from_argv, save_artifact
+
+
+def probes_table():
+    rows = []
+    for M in (100, 500, 1000, 4000, 16000):
+        full = M
+        pod = 3 + 8
+        rows.append({"M": M, "full_probes": full, "pod_probes": pod,
+                     "ratio": pod / full})
+    return rows
+
+
+def kernel_throughput(Ms=(128, 512, 2048, 8192), B=256, iters=20):
+    from repro.kernels import pod_route, weighted_argmin
+    inv = jnp.array([25.0, 50.0, 125.0], jnp.float32)
+    out = []
+    key = jax.random.PRNGKey(0)
+    for M in Ms:
+        ks = jax.random.split(key, 5)
+        W = jax.random.uniform(ks[0], (M,)) * 100
+        cls = jax.random.randint(ks[1], (B, M), 0, 3)
+        ci = jax.random.randint(ks[2], (B, 11), 0, M)
+        cc = jax.random.randint(ks[3], (B, 11), 0, 3)
+        cv = jnp.ones((B, 11), bool)
+
+        full = lambda: weighted_argmin(W, cls, inv)[0].block_until_ready()
+        pod = lambda: pod_route(W, ci, cc, cv, inv)[0].block_until_ready()
+        full();  pod()                         # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            full()
+        t_full = (time.perf_counter() - t0) / iters / B * 1e6
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            pod()
+        t_pod = (time.perf_counter() - t0) / iters / B * 1e6
+        out.append({"M": M, "full_us_per_decision": t_full,
+                    "pod_us_per_decision": t_pod,
+                    "speedup": t_full / t_pod})
+    return out
+
+
+def main(preset=None):
+    probes = probes_table()
+    thr = kernel_throughput()
+    out = {"probes": probes, "kernel_throughput": thr}
+    save_artifact("complexity", out)
+    print("\n== Complexity: probes per routing decision (paper §IV-C) ==")
+    print(f"{'M':>7} {'full O(M)':>10} {'Pod O(1)':>9} {'fraction':>9}")
+    for r in probes:
+        print(f"{r['M']:>7} {r['full_probes']:>10} {r['pod_probes']:>9} "
+              f"{r['ratio']:>8.1%}")
+    print("\n== Router kernel wall-clock (interpret mode, CPU) ==")
+    print(f"{'M':>7} {'full us/dec':>12} {'pod us/dec':>11} {'speedup':>8}")
+    for r in thr:
+        print(f"{r['M']:>7} {r['full_us_per_decision']:>12.2f} "
+              f"{r['pod_us_per_decision']:>11.2f} {r['speedup']:>8.1f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Fig 3 — high-load zoom (exponential/geometric service)."""
+from common import ascii_plot, preset_from_argv, print_table, run_figure
+
+
+def main(preset=None):
+    p = preset or preset_from_argv()
+    out = run_figure(p, p.high_loads, "geometric", "fig3_highload_exp")
+    print_table(out)
+    print(ascii_plot(out))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Fig 4 — fixed high load where BP & JSQ-MW are delay-optimal (exponential)."""
+from common import ALGO_LABELS, preset_from_argv, print_table, run_figure
+
+
+def main(preset=None):
+    p = preset or preset_from_argv()
+    out = run_figure(p, (p.fixed_load,), "geometric", "fig4_fixedload_exp")
+    print_table(out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

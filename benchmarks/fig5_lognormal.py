@@ -1,0 +1,14 @@
+"""Fig 5 — mean completion vs load (log-normal service)."""
+from common import ascii_plot, preset_from_argv, print_table, run_figure
+
+
+def main(preset=None):
+    p = preset or preset_from_argv()
+    out = run_figure(p, p.loads, "lognormal", "fig5_lognormal")
+    print_table(out)
+    print(ascii_plot(out))
+    return out
+
+
+if __name__ == "__main__":
+    main()

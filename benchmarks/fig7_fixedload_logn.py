@@ -1,0 +1,13 @@
+"""Fig 7 — fixed high load (log-normal)."""
+from common import ALGO_LABELS, preset_from_argv, print_table, run_figure
+
+
+def main(preset=None):
+    p = preset or preset_from_argv()
+    out = run_figure(p, (p.fixed_load,), "lognormal", "fig7_fixedload_logn")
+    print_table(out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Benchmark orchestrator — one harness per paper figure/table + the
+framework's complexity/roofline reports.  Prints a ``name,seconds,headline``
+CSV summary at the end.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--preset=paper]
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import balls_and_bins
+import complexity
+import fig2_exponential
+import fig3_highload_exp
+import fig4_fixedload_exp
+import fig5_lognormal
+import fig6_highload_logn
+import fig7_fixedload_logn
+import locality
+import roofline_table
+from common import preset_from_argv
+
+
+def _headline(name, out):
+    try:
+        if name.startswith("fig"):
+            algos = out["algos"]
+            bp = algos["balanced_pandas"]["mean"]
+            pod = algos["balanced_pandas_pod"]["mean"]
+            import numpy as np
+            gain = float(np.nanmean((np.array(bp) - np.array(pod))
+                                    / np.array(bp)))
+            return f"BP-Pod vs BP mean-completion gain {gain:+.1%}"
+        if name == "complexity":
+            r = out["probes"][1]
+            return (f"M={r['M']}: Pod probes {r['ratio']:.1%} of full "
+                    f"(paper: 2.2%)")
+        if name == "roofline":
+            done = [r for r in out if isinstance(r, dict)
+                    and "skipped" not in r]
+            return f"{len(done)} cells"
+    except Exception:
+        pass
+    return ""
+
+
+def main() -> None:
+    preset = preset_from_argv()
+    print(f"[benchmarks] preset={preset.name} M={preset.cluster.M} "
+          f"K={preset.cluster.K} T={preset.cfg.T}")
+    suites = [
+        ("fig2_exponential", fig2_exponential.main),
+        ("fig3_highload_exp", fig3_highload_exp.main),
+        ("fig4_fixedload_exp", fig4_fixedload_exp.main),
+        ("fig5_lognormal", fig5_lognormal.main),
+        ("fig6_highload_logn", fig6_highload_logn.main),
+        ("fig7_fixedload_logn", fig7_fixedload_logn.main),
+        ("locality", locality.main),
+        ("complexity", complexity.main),
+        ("balls_and_bins", balls_and_bins.main),
+        ("roofline", roofline_table.main),
+    ]
+    summary = []
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            out = fn(preset)
+            summary.append((name, time.time() - t0, _headline(name, out)))
+        except Exception as e:  # keep the harness running
+            summary.append((name, time.time() - t0, f"FAILED: {e}"))
+            print(f"[benchmarks] {name} FAILED: {e}", file=sys.stderr)
+    print("\nname,seconds,headline")
+    for name, dt, head in summary:
+        print(f"{name},{dt:.1f},{head}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Launch one dry-run cell from Python (what scripts/run_dryrun_sweep.sh
+loops over): lower + compile an (arch x shape) on the production mesh and
+print its roofline inputs.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py [arch] [shape] [mesh]
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "deepseek_moe_16b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+    mesh = sys.argv[3] if len(sys.argv) > 3 else "pod"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    # a dry run owns the process: 512 fake devices are set before jax import
+    subprocess.run([sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", arch, "--shape", shape, "--mesh", mesh,
+                    "--out", "artifacts/dryrun"], cwd=ROOT, env=env,
+                   check=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper-scale (M=500) claims validation — trimmed to the loads that decide
+C1/C2/C3/C6.  Writes artifacts/bench/paper_scale.json."""
+import os, sys, time, json
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+import numpy as np
+from repro.core import Cluster, Rates, SimConfig, simulate_grid
+
+cluster = Cluster(M=500, K=10)
+rates = Rates(0.01, 0.005, 0.002)
+cfg = SimConfig(T=24_000, warmup=6_000, route_mode="sequential")
+loads = (0.3, 0.5, 0.7, 0.8, 0.9)
+algos = ("balanced_pandas", "balanced_pandas_pod", "jsq_maxweight",
+         "jsq_maxweight_pod", "jsq_priority", "fcfs")
+out = {"M": 500, "K": 10, "T": cfg.T, "loads": list(loads), "dists": {}}
+for dist in ("geometric", "lognormal"):
+    import dataclasses
+    c = dataclasses.replace(cfg, service_dist=dist)
+    rows = {}
+    for algo in algos:
+        t0 = time.time()
+        res = simulate_grid(algo, cluster, rates, list(loads), 3, c)
+        t = np.asarray(res.mean_completion_norm)
+        rows[algo] = {
+            "mean": t.mean(0).tolist(),
+            "sem": (t.std(0) / np.sqrt(t.shape[0])).tolist(),
+            "drift": np.asarray(res.drift).mean(0).tolist(),
+            "local_frac": np.asarray(res.locality_fractions)[..., 0].mean(0).tolist(),
+        }
+        print(f"[{dist}] {algo:22s} " + " ".join(f"{x:7.2f}" for x in rows[algo]["mean"]) + f"  ({time.time()-t0:.0f}s)", flush=True)
+    out["dists"][dist] = rows
+os.makedirs("artifacts/bench", exist_ok=True)
+json.dump(out, open("artifacts/bench/paper_scale.json", "w"), indent=1)
+print("WROTE artifacts/bench/paper_scale.json")

@@ -1,0 +1,26 @@
+"""C2 mechanism ablation: full-BP tie-breaking policy decides the sign of
+the BP-Pod vs BP medium-load comparison (EXPERIMENTS §Paper-claims)."""
+import os, sys, json, time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import numpy as np
+from repro.core import Cluster, Rates, SimConfig, simulate_grid
+
+cluster = Cluster(M=500, K=10)
+rates = Rates(0.01, 0.005, 0.002)
+cfg = SimConfig(T=24_000, warmup=6_000, route_mode="sequential")
+loads = (0.5, 0.6, 0.7, 0.8)
+out = {"loads": list(loads), "algos": {}}
+for algo in ("balanced_pandas", "balanced_pandas_randomtie",
+             "balanced_pandas_pod"):
+    t0 = time.time()
+    res = simulate_grid(algo, cluster, rates, list(loads), 3, cfg)
+    t = np.asarray(res.mean_completion_norm)
+    out["algos"][algo] = {
+        "mean": t.mean(0).tolist(),
+        "sem": (t.std(0)/np.sqrt(3)).tolist(),
+        "local_frac": np.asarray(res.locality_fractions)[..., 0].mean(0).tolist()}
+    print(f"{algo:28s} " + " ".join(f"{x:7.2f}" for x in out['algos'][algo]['mean'])
+          + "   loc " + " ".join(f"{x:.2f}" for x in out['algos'][algo]['local_frac'])
+          + f" ({time.time()-t0:.0f}s)", flush=True)
+json.dump(out, open("artifacts/bench/tiebreak_ablation.json", "w"), indent=1)
+print("WROTE artifacts/bench/tiebreak_ablation.json")

@@ -1,0 +1,157 @@
+"""Fault-tolerant checkpointing: msgpack+zstd leaves, atomic manifest,
+content hashes, elastic restore onto a different mesh, async save.
+
+Layout of one checkpoint:
+    <dir>/step_000123/
+        data.msgpack.zst      leaf payloads (host-gathered numpy)
+        MANIFEST.json         step, tree structure, shapes/dtypes, sha256s
+
+Guarantees:
+  - Atomicity: everything is written into step_xxx.tmp.<pid> and renamed
+    into place only after fsync; a crash mid-save never corrupts the latest
+    valid checkpoint (restore scans for the newest dir WITH a manifest).
+  - Integrity: per-leaf sha256 recorded and verified on restore.
+  - Elasticity: leaves are stored as full (host-replicated) arrays; restore
+    takes target shardings and device_puts each leaf, so a checkpoint
+    written on one mesh restores onto any other mesh/topology (tested with
+    save@1x4 -> restore@2x2 in tests/test_checkpoint.py).
+  - Async: save() can run in a background thread (fault-tolerant trainers
+    should not stall the step loop); join_pending() fences.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+_PENDING: list[threading.Thread] = []
+
+
+def _tree_flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None,
+         async_: bool = False, keep: int = 3) -> str:
+    """Write checkpoint; returns the final path."""
+    paths, leaves, _ = _tree_flatten_with_paths(tree)
+    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+
+    final = os.path.join(directory, f"step_{step:08d}")
+
+    def _write():
+        tmp = final + f".tmp.{os.getpid()}"
+        os.makedirs(tmp, exist_ok=True)
+        payload = {}
+        manifest_leaves = {}
+        for p, arr in zip(paths, host_leaves):
+            raw = arr.tobytes()
+            payload[p] = raw
+            manifest_leaves[p] = {
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha256": hashlib.sha256(raw).hexdigest(),
+            }
+        blob = msgpack.packb(payload, use_bin_type=True)
+        comp = zstd.ZstdCompressor(level=3).compress(blob)
+        with open(os.path.join(tmp, "data.msgpack.zst"), "wb") as f:
+            f.write(comp)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest = {"step": step, "leaves": manifest_leaves,
+                    "extra": extra or {}}
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(directory, keep)
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        _PENDING.append(t)
+    else:
+        _write()
+    return final
+
+
+def join_pending() -> None:
+    while _PENDING:
+        _PENDING.pop().join()
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(find_all(directory))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def find_all(directory: str) -> list[int]:
+    """All steps with a complete (manifest-bearing) checkpoint."""
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.count(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "MANIFEST.json")):
+                out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def find_latest(directory: str) -> Optional[int]:
+    steps = find_all(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, target: Any,
+            shardings: Optional[Any] = None, verify: bool = True) -> Any:
+    """Restore into the structure of ``target`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: matching pytree of jax.sharding
+    objects for elastic placement (None -> default device placement)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    with open(os.path.join(path, "data.msgpack.zst"), "rb") as f:
+        blob = zstd.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(blob, raw=False)
+
+    paths, leaves, treedef = _tree_flatten_with_paths(target)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    out = []
+    for p, like, shd in zip(paths, leaves, shard_leaves):
+        meta = manifest["leaves"][p]
+        raw = payload[p]
+        if verify and hashlib.sha256(raw).hexdigest() != meta["sha256"]:
+            raise IOError(f"checkpoint leaf {p} failed integrity check")
+        arr = np.frombuffer(raw, dtype=meta["dtype"]).reshape(meta["shape"])
+        want_dtype = like.dtype if hasattr(like, "dtype") else arr.dtype
+        arr = arr.astype(want_dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jnp.asarray(arr))
+    return treedef.unflatten(out), manifest
+
+
+def restore_latest(directory: str, target: Any, shardings=None):
+    step = find_latest(directory)
+    if step is None:
+        return None
+    tree, manifest = restore(directory, step, target, shardings)
+    return step, tree, manifest

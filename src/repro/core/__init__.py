@@ -1,0 +1,42 @@
+"""Core library: the paper's scheduling algorithms + slotted JAX simulator."""
+from .cluster import (
+    GEOMETRIC,
+    LOCAL,
+    LOGNORMAL,
+    RACK,
+    REMOTE,
+    Cluster,
+    Rates,
+    capacity_arrival_rate,
+    locality_class,
+    sample_durations,
+    sample_locals,
+)
+from .policies import (
+    PodSpec,
+    bp_candidates_per_route,
+    jsqmw_candidates_per_schedule,
+    lex_argmax,
+    lex_argmin,
+    masked_draws,
+    pod_candidates,
+    route_balanced_pandas_full,
+    route_jsq_local,
+    route_pod_candidates,
+    sample_rack_peer,
+    sample_remote_peer,
+)
+from .simulator import (
+    ALGORITHMS,
+    BP_POD_DEFAULT,
+    JSQMW_POD_DEFAULT,
+    BPState,
+    FCFSState,
+    SimConfig,
+    SimResult,
+    SQState,
+    simulate,
+    simulate_grid,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

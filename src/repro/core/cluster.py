@@ -1,0 +1,158 @@
+"""Cluster topology: M servers in K equal racks, 3-level data locality.
+
+This mirrors the paper's §III system model.  A task's data chunk lives on
+``n_replicas`` (default 3, the Hadoop default) "local" servers.  Servers that
+share a rack with a local server are "rack-local"; everything else is
+"remote".  Service durations are geometric (the paper's discrete-time model,
+the memoryless analogue of exponential) or discretized log-normal (the
+paper's heavy-tail simulation), with per-slot rates alpha > beta > gamma.
+
+On a TPU fleet the same three levels are: HBM-resident state (local),
+same-pod fetch over ICI (rack-local), cross-pod fetch over DCN (remote) —
+see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LOCAL, RACK, REMOTE = 0, 1, 2
+
+
+class Rates(NamedTuple):
+    """Per-slot service completion probabilities (local, rack-local, remote)."""
+
+    alpha: float = 0.04
+    beta: float = 0.02
+    gamma: float = 0.008
+
+    def as_array(self) -> jnp.ndarray:
+        return jnp.array([self.alpha, self.beta, self.gamma], dtype=jnp.float32)
+
+    def mean_slots(self) -> jnp.ndarray:
+        return 1.0 / self.as_array()
+
+
+@dataclasses.dataclass(frozen=True)
+class Cluster:
+    """Static cluster topology.  All fields are Python ints / tuples so the
+    object can be closed over by ``jax.jit`` without retracing hazards."""
+
+    M: int  # number of servers
+    K: int  # number of racks (M % K == 0)
+    n_replicas: int = 3  # local servers per task (Hadoop default)
+
+    def __post_init__(self):
+        if self.M % self.K != 0:
+            raise ValueError(f"M={self.M} must be divisible by K={self.K}")
+        if self.n_replicas >= self.M:
+            raise ValueError("need n_replicas < M")
+
+    @property
+    def rack_size(self) -> int:
+        return self.M // self.K
+
+    @property
+    def rack_of(self) -> jnp.ndarray:
+        """[M] int32 — rack index of each server."""
+        return (jnp.arange(self.M, dtype=jnp.int32) // self.rack_size)
+
+    @property
+    def same_rack(self) -> jnp.ndarray:
+        """[M, M] bool — same-rack incidence (used by JSQ-MW scheduling)."""
+        r = self.rack_of
+        return r[:, None] == r[None, :]
+
+
+def sample_locals(key: jax.Array, cluster: Cluster, batch: int) -> jnp.ndarray:
+    """Sample ``batch`` tasks' local-server triples, distinct within a task.
+
+    Returns int32 [batch, n_replicas].  Exact sequential-skip sampling: the
+    i-th replica is drawn uniformly from the M-i servers not yet chosen and
+    mapped back by skipping earlier picks — O(n_replicas) ints per task
+    instead of an O(M log M) Gumbel-top-k (this is the simulator's innermost
+    hot path)."""
+    n = cluster.n_replicas
+    draws = jax.random.randint(
+        key, (batch, n), 0,
+        jnp.arange(cluster.M, cluster.M - n, -1, dtype=jnp.int32)[None, :])
+
+    def place(i, picks):
+        d = draws[:, i]
+        # skip already-chosen indices in ascending order
+        for j in range(n):  # static unroll over earlier picks (n is tiny)
+            prev = jnp.sort(picks, axis=1)[:, j]
+            d = jnp.where((j < i) & (d >= prev), d + 1, d)
+        return picks.at[:, i].set(d)
+
+    picks = jnp.full((batch, n), jnp.iinfo(jnp.int32).max, dtype=jnp.int32)
+    for i in range(n):  # n_replicas is a small static constant (3)
+        picks = place(i, picks)
+    return picks.astype(jnp.int32)
+
+
+def locality_class(cluster: Cluster, locals_: jnp.ndarray) -> jnp.ndarray:
+    """Per-server locality class for a batch of tasks.
+
+    locals_: int32 [..., n_replicas] — indices of each task's local servers.
+    Returns int32 [..., M] with values LOCAL / RACK / REMOTE.
+    """
+    rack_of = cluster.rack_of
+    m = jnp.arange(cluster.M, dtype=jnp.int32)
+    is_local = (locals_[..., None] == m).any(axis=-2)  # [..., M]
+    local_racks = rack_of[locals_]  # [..., n_replicas]
+    in_local_rack = (local_racks[..., None] == rack_of[None, :]).any(axis=-2)
+    cls = jnp.where(is_local, LOCAL, jnp.where(in_local_rack, RACK, REMOTE))
+    return cls.astype(jnp.int32)
+
+
+def capacity_arrival_rate(cluster: Cluster, rates: Rates, load: float) -> float:
+    """Arrival rate (tasks/slot) at ``load`` fraction of the capacity boundary.
+
+    With symmetric random locality every task can, at the boundary, be served
+    locally, so the capacity region edge is lambda = M * alpha (paper §III-A
+    specialized to the symmetric traffic used in its §V simulations).
+    """
+    return float(load) * cluster.M * rates.alpha
+
+
+# ---------------------------------------------------------------------------
+# Service-duration sampling.  Durations are sampled once, at service start
+# (exactly equivalent for the memoryless geometric law; required for the
+# non-memoryless log-normal law), and counted down slot by slot.
+# ---------------------------------------------------------------------------
+
+GEOMETRIC = "geometric"
+LOGNORMAL = "lognormal"
+
+_MAX_DURATION = 1_000_000  # safety clip, >> any mean we use
+
+
+def sample_durations(
+    key: jax.Array,
+    cls: jnp.ndarray,
+    rates: Rates,
+    dist: str = GEOMETRIC,
+    sigma: float = 1.0,
+) -> jnp.ndarray:
+    """Sample integer service durations (slots, >= 1) for tasks of class
+    ``cls`` (int32 [...], values in {LOCAL, RACK, REMOTE}).
+
+    geometric:  P(D = k) = p (1-p)^{k-1},  mean 1/p,  p = rates[cls].
+    lognormal:  ceil(LogNormal(mu_c, sigma)) with mu_c chosen so the
+                continuous mean is 1/p  (heavy-tailed; paper figs 5-7).
+    """
+    p = rates.as_array()[cls]
+    if dist == GEOMETRIC:
+        u = jax.random.uniform(key, cls.shape, minval=1e-7, maxval=1.0 - 1e-7)
+        d = jnp.ceil(jnp.log1p(-u) / jnp.log1p(-p))
+    elif dist == LOGNORMAL:
+        z = jax.random.normal(key, cls.shape)
+        mu = -jnp.log(p) - 0.5 * sigma * sigma
+        d = jnp.ceil(jnp.exp(mu + sigma * z))
+    else:
+        raise ValueError(f"unknown service distribution {dist!r}")
+    return jnp.clip(d, 1, _MAX_DURATION).astype(jnp.int32)

@@ -1,0 +1,224 @@
+"""Routing / scheduling policies from the paper (§IV), as pure JAX functions.
+
+Routing policies map (workloads, task locality, rng) -> chosen server.
+Scheduling policies are embedded in the per-family simulators (simulator.py)
+because they operate on the family's queue structure; this module provides
+the shared primitives: exact lexicographic arg-min/max with masking, and
+power-of-d candidate sampling.
+
+Complexity accounting: the *simulation* of a policy is vectorized (that is
+what makes it a JAX program), but the *algorithm's* message complexity — how
+many queue-length/workload values the central scheduler must fetch per
+decision — is the candidate-set size.  Each policy exposes
+``candidates_per_decision`` so benchmarks report the paper's O(M) vs O(1)
+comparison from first principles (paper §IV-C: (d+3)/M, 2.2% for M=500, d=8).
+
+Sampling model: Pod candidates are drawn uniformly **with replacement** from
+the rack-local / remote sets (the standard Mitzenmacher power-of-d model;
+the collision probability for d=8 out of hundreds is <3% and only ever
+*shrinks* the effective d, i.e. it is conservative for the paper's claims).
+Draws use cumulative-count inversion (cumsum + searchsorted), which is O(M)
+per task instead of the O(M log M) Gumbel-top-k a without-replacement draw
+would need — this is the simulator's innermost loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .cluster import LOCAL, RACK, REMOTE, Cluster, locality_class
+
+_INF = jnp.inf
+
+
+def lex_argmin(values: jnp.ndarray, *tiebreaks: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Exact staged arg-min: minimize ``values`` over ``mask``; break ties by
+    each ``tiebreaks`` array in turn (lower wins); final ties -> lowest index.
+
+    Exact (no epsilon hacks): comparisons are staged, so float resolution
+    never mixes keys.  Inputs [..., M]; reduction over the last axis.
+    """
+    v = jnp.where(mask, values, _INF)
+    best = jnp.min(v, axis=-1, keepdims=True)
+    tie = (v == best) & mask
+    for tb in tiebreaks:
+        t = jnp.where(tie, tb, _INF)
+        tbest = jnp.min(t, axis=-1, keepdims=True)
+        tie = tie & (t == tbest)
+    return jnp.argmax(tie, axis=-1).astype(jnp.int32)
+
+
+def lex_argmax(values: jnp.ndarray, *tiebreaks: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    return lex_argmin(-values, *tiebreaks, mask=mask)
+
+
+def masked_draws(key: jax.Array, set_mask: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """k uniform-with-replacement draws from each row of ``set_mask``.
+
+    set_mask: bool [..., M].  Returns (idx int32 [..., k], valid bool [..., k]);
+    rows with an empty set yield valid=False.  Inversion sampling: the
+    (u+1)-th set member is the first index where cumsum(mask) > u.
+    """
+    csum = jnp.cumsum(set_mask.astype(jnp.int32), axis=-1)
+    total = csum[..., -1]
+    u = jax.random.randint(key, set_mask.shape[:-1] + (k,), 0,
+                           jnp.maximum(total, 1)[..., None])
+    flat_c = csum.reshape(-1, csum.shape[-1])
+    flat_u = u.reshape(-1, k)
+    idx = jax.vmap(lambda c, uu: jnp.searchsorted(c, uu, side="right"))(flat_c, flat_u)
+    idx = idx.reshape(u.shape).astype(jnp.int32)
+    valid = jnp.broadcast_to((total > 0)[..., None], idx.shape)
+    return jnp.minimum(idx, set_mask.shape[-1] - 1), valid
+
+
+@dataclasses.dataclass(frozen=True)
+class PodSpec:
+    """Power-of-d sampling spec: how many rack-local / remote servers to probe
+    in addition to the task's local servers.  The paper's §V uses d=8 split as
+    (2 rack-local, 6 remote) for Balanced-Pandas-Pod and d'=12 as (6, 6) for
+    JSQ-MaxWeight-Pod scheduling."""
+
+    d_rack: int
+    d_remote: int
+
+    @property
+    def d(self) -> int:
+        return self.d_rack + self.d_remote
+
+
+def pod_candidates(
+    key: jax.Array,
+    cluster: Cluster,
+    locals_: jnp.ndarray,
+    cls: jnp.ndarray,
+    pod: PodSpec,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Candidate lists for Balanced-Pandas-Pod routing.
+
+    locals_: int32 [..., n_rep]; cls: int32 [..., M] locality classes.
+    Returns (cand_idx, cand_cls, valid), each [..., C] with
+    C = n_rep + d_rack + d_remote, ordered [locals | rack draws | remote
+    draws] so that first-index tie-breaking prefers faster classes — the
+    ordering the paper's ArgMin notation implies.
+    """
+    k_rack, k_rem = jax.random.split(key)
+    n_rep = locals_.shape[-1]
+    rack_idx, rack_ok = masked_draws(k_rack, cls == RACK, pod.d_rack)
+    rem_idx, rem_ok = masked_draws(k_rem, cls == REMOTE, pod.d_remote)
+    cand_idx = jnp.concatenate([locals_, rack_idx, rem_idx], axis=-1)
+    shp = locals_.shape[:-1]
+    cand_cls = jnp.concatenate([
+        jnp.broadcast_to(jnp.int32(LOCAL), shp + (n_rep,)),
+        jnp.broadcast_to(jnp.int32(RACK), shp + (pod.d_rack,)),
+        jnp.broadcast_to(jnp.int32(REMOTE), shp + (pod.d_remote,)),
+    ], axis=-1)
+    valid = jnp.concatenate(
+        [jnp.ones(shp + (n_rep,), bool), rack_ok, rem_ok], axis=-1)
+    return cand_idx, cand_cls, valid
+
+
+def route_pod_candidates(
+    key: jax.Array,
+    W: jnp.ndarray,
+    cand_idx: jnp.ndarray,
+    cand_cls: jnp.ndarray,
+    valid: jnp.ndarray,
+    inv_rates: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Argmin of weighted workload over an explicit candidate list.
+
+    Semantics shared with kernels/pod_route.py (which accelerates exactly
+    this on TPU).  Ties: faster class first (candidate ordering), then
+    uniformly at random.  Returns (server, class) for each task.
+    """
+    scores = W[cand_idx] * inv_rates[cand_cls]
+    rnd = jax.random.uniform(key, cand_idx.shape)
+    c = lex_argmin(scores, cand_cls.astype(jnp.float32), rnd, mask=valid)
+    sel = jnp.take_along_axis(cand_idx, c[..., None], axis=-1)[..., 0]
+    sel_cls = jnp.take_along_axis(cand_cls, c[..., None], axis=-1)[..., 0]
+    return sel, sel_cls
+
+
+def route_balanced_pandas_full(
+    W: jnp.ndarray,
+    cls: jnp.ndarray,
+    inv_rates: jnp.ndarray,
+    tie_rnd: jnp.ndarray,
+    class_tiebreak: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Balanced-Pandas O(M) routing: argmin over all M of the weighted
+    workload (paper §IV-A).  Ties -> faster class (the ArgMin term ordering;
+    class_tiebreak=False ablates to uniform-random ties — the variant that
+    reproduces the paper's BP-Pod>BP medium-load ordering, see EXPERIMENTS
+    §Paper-claims), then ``tie_rnd`` (a [M] random priority, shared within a
+    slot — unbiased across slots)."""
+    ww = W * inv_rates[cls]
+    mask = jnp.ones(cls.shape, bool)
+    keys = ((cls.astype(jnp.float32),) if class_tiebreak else ())
+    sel = lex_argmin(ww, *keys,
+                     jnp.broadcast_to(tie_rnd, cls.shape), mask=mask)
+    sel_cls = jnp.take_along_axis(cls, sel[..., None], axis=-1)[..., 0]
+    return sel, sel_cls
+
+
+def route_jsq_local(
+    key: jax.Array,
+    Q: jnp.ndarray,
+    locals_: jnp.ndarray,
+) -> jnp.ndarray:
+    """JSQ-MaxWeight(-Pod) / JSQ-Priority routing: join the shortest *local*
+    queue (paper §IV-B).  Q: [M]; locals_: int32 [..., R].  Already O(1):
+    only the n_replicas local queues are examined."""
+    qloc = Q[locals_]
+    rnd = jax.random.uniform(key, locals_.shape)
+    mask = jnp.ones(locals_.shape, dtype=bool)
+    pick = lex_argmin(qloc.astype(jnp.float32), rnd, mask=mask)
+    return jnp.take_along_axis(locals_, pick[..., None], axis=-1)[..., 0]
+
+
+# ----------------------------------------------------------------------------
+# O(1) in-rack / out-of-rack draws (server ids are contiguous by rack, so both
+# sets are index intervals — no cumsum needed).  Used by JSQ-MW-Pod scheduling.
+# ----------------------------------------------------------------------------
+
+
+def sample_rack_peer(key: jax.Array, cluster: Cluster, server: jnp.ndarray,
+                     k: int) -> jnp.ndarray:
+    """k uniform draws (with replacement) from ``server``'s rack, excluding
+    itself.  server: int32 [...]; returns int32 [..., k]."""
+    R = cluster.rack_size
+    start = (server // R) * R
+    off = server - start
+    x = jax.random.randint(key, server.shape + (k,), 0, max(R - 1, 1))
+    x = x + (x >= off[..., None])
+    return start[..., None] + x
+
+
+def sample_remote_peer(key: jax.Array, cluster: Cluster, server: jnp.ndarray,
+                       k: int) -> jnp.ndarray:
+    """k uniform draws (with replacement) from outside ``server``'s rack."""
+    R = cluster.rack_size
+    start = (server // R) * R
+    u = jax.random.randint(key, server.shape + (k,), 0, max(cluster.M - R, 1))
+    return u + jnp.where(u >= start[..., None], R, 0)
+
+
+# ----------------------------------------------------------------------------
+# Message/complexity accounting (paper §IV-C / abstract): values the central
+# scheduler must fetch per decision.
+# ----------------------------------------------------------------------------
+
+
+def bp_candidates_per_route(cluster: Cluster, pod: Optional[PodSpec]) -> int:
+    if pod is None:
+        return cluster.M
+    return cluster.n_replicas + pod.d
+
+
+def jsqmw_candidates_per_schedule(cluster: Cluster, pod: Optional[PodSpec]) -> int:
+    if pod is None:
+        return cluster.M
+    return 1 + pod.d

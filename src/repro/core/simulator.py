@@ -1,0 +1,650 @@
+"""Discrete-time slotted simulator for the paper's system model (§III).
+
+Three queue-structure families cover the paper's six algorithms:
+
+  BP family      (3 sub-queues per server: local / rack-local / remote)
+      - balanced_pandas        routing: argmin weighted workload over all M
+      - balanced_pandas_pod    routing: argmin over 3 locals + d sampled
+      scheduling (both): serve own local queue, then rack-local, then remote.
+
+  SQ family      (one queue per server; queued tasks are local to it)
+      - jsq_maxweight          routing: shortest local queue (O(1) already);
+                               scheduling: argmax over all M of
+                               {alpha*Q_own, beta*Q_rack, gamma*Q_other}.
+      - jsq_maxweight_pod      scheduling: argmax over own + d' sampled.
+      - jsq_priority           scheduling: own queue first, else longest
+                               queue in own rack, else longest anywhere.
+
+  FCFS           (single central queue; idle servers grab the head task)
+
+Time is slotted; service durations are sampled once at service start
+(geometric == the paper's discrete-time model / memoryless; log-normal ==
+the paper's heavy-tail simulations) and counted down.  Within a slot the
+order is completions -> scheduling -> arrivals, and the task-in-system count
+N is read at slot end, so Little's law (E[T] = E[N]/lambda) gives the mean
+task completion time without per-task bookkeeping.  A numpy event-accurate
+reference with per-task sojourns (refsim.py) validates this in tests.
+
+Routing modes:
+  sequential — each arrival sees the workload left by the previous one
+               (faithful to the paper's per-arrival routing; inner scan).
+  batched    — all arrivals in a slot route against one workload snapshot
+               (what a batching RPC scheduler does; what kernels/ accelerates).
+
+Scheduling is batched per slot: all idle servers act against the same
+snapshot, with steal conflicts resolved by weight priority and queue-length
+caps.  ``SimConfig.s_max`` bounds scheduling attempts per slot (capped
+servers retry next slot); set s_max >= M for the exact uncapped dynamics
+(tests do) — the default 64 only matters in transients where >64 servers
+try to steal simultaneously.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .cluster import (
+    GEOMETRIC,
+    LOCAL,
+    RACK,
+    REMOTE,
+    Cluster,
+    Rates,
+    capacity_arrival_rate,
+    locality_class,
+    sample_durations,
+    sample_locals,
+)
+from .policies import (
+    PodSpec,
+    bp_candidates_per_route,
+    jsqmw_candidates_per_schedule,
+    lex_argmax,
+    lex_argmin,
+    pod_candidates,
+    route_balanced_pandas_full,
+    route_jsq_local,
+    route_pod_candidates,
+    sample_rack_peer,
+    sample_remote_peer,
+)
+
+_INF = jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Static simulation parameters (hashable: safe as a jit static arg)."""
+
+    T: int = 20_000               # total slots
+    warmup: int = 4_000           # slots discarded before measuring
+    a_max: int = 0                # max arrivals per slot (0 = auto from load)
+    s_max: int = 64               # max scheduling attempts per slot
+    route_mode: str = "sequential"  # "sequential" | "batched"
+    service_dist: str = GEOMETRIC   # "geometric" | "lognormal"
+    sigma: float = 1.0              # log-normal shape
+
+    def resolve_a_max(self, lam: float) -> int:
+        if self.a_max > 0:
+            return self.a_max
+        import math
+        return int(math.ceil(lam + 6.0 * math.sqrt(lam) + 4))
+
+
+class RawSums(NamedTuple):
+    """Per-run accumulators."""
+
+    slots: jnp.ndarray
+    sum_N: jnp.ndarray
+    sum_N_h1: jnp.ndarray
+    sum_N_h2: jnp.ndarray
+    arrivals: jnp.ndarray
+    clipped: jnp.ndarray
+    completions: jnp.ndarray
+    starts: jnp.ndarray        # [3] service starts by locality class
+    routed: jnp.ndarray        # [3] routing decisions by chosen class (BP family)
+    busy: jnp.ndarray
+    route_decisions: jnp.ndarray
+    sched_decisions: jnp.ndarray
+    final_N: jnp.ndarray
+
+    @staticmethod
+    def zero() -> "RawSums":
+        z = jnp.float32(0.0)
+        return RawSums(z, z, z, z, z, z, z, jnp.zeros(3, jnp.float32),
+                       jnp.zeros(3, jnp.float32), z, z, z, z)
+
+
+class SimResult(NamedTuple):
+    mean_tasks_in_system: jnp.ndarray
+    mean_completion_slots: jnp.ndarray
+    mean_completion_norm: jnp.ndarray   # units of mean local service time
+    arrival_rate_hat: jnp.ndarray
+    throughput: jnp.ndarray
+    utilization: jnp.ndarray
+    locality_fractions: jnp.ndarray     # [3] of service starts
+    routed_fractions: jnp.ndarray       # [3] of routing choices (BP family)
+    drift: jnp.ndarray                  # mean_N(2nd half) / mean_N(1st half)
+    clip_fraction: jnp.ndarray
+    route_decisions: jnp.ndarray
+    sched_decisions: jnp.ndarray
+    route_candidates_per_decision: jnp.ndarray
+    sched_candidates_per_decision: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Shared slot plumbing
+# ---------------------------------------------------------------------------
+
+
+def _progress_service(busy, rem):
+    """Advance busy servers one slot; return (busy', rem', completed_mask)."""
+    rem = jnp.where(busy, rem - 1, 0)
+    completed = busy & (rem <= 0)
+    busy = busy & ~completed
+    rem = jnp.where(busy, rem, 0)
+    return busy, rem, completed
+
+
+def _arrival_batch(key, cluster, lam, a_max, need_cls: bool):
+    """Poisson arrival count (clipped to a_max) + per-arrival locality."""
+    k_n, k_loc = jax.random.split(key)
+    raw = jax.random.poisson(k_n, lam)
+    n = jnp.minimum(raw, a_max)
+    mask = jnp.arange(a_max) < n
+    locals_ = sample_locals(k_loc, cluster, a_max)
+    cls = locality_class(cluster, locals_) if need_cls else None
+    return mask, locals_, cls, (raw - n).astype(jnp.float32)
+
+
+def _relation_rows(cluster: Cluster, rows: jnp.ndarray) -> jnp.ndarray:
+    """[S, M] locality class of server rows[s] serving a task queued at
+    (= local to) server n."""
+    rack_of = cluster.rack_of
+    n = jnp.arange(cluster.M, dtype=jnp.int32)
+    same = rack_of[rows][:, None] == rack_of[None, :]
+    own = rows[:, None] == n[None, :]
+    return jnp.where(own, LOCAL, jnp.where(same, RACK, REMOTE)).astype(jnp.int32)
+
+
+def _acc(sums: RawSums, *, in_half2, N, arr, clipped, comp, starts, routed,
+         busy_n, routes, scheds, measure) -> RawSums:
+    f = jnp.float32
+    w = f(measure)
+    return RawSums(
+        slots=sums.slots + w,
+        sum_N=sums.sum_N + w * N,
+        sum_N_h1=sums.sum_N_h1 + w * N * (1.0 - f(in_half2)),
+        sum_N_h2=sums.sum_N_h2 + w * N * f(in_half2),
+        arrivals=sums.arrivals + w * arr,
+        clipped=sums.clipped + w * clipped,
+        completions=sums.completions + w * comp,
+        starts=sums.starts + w * starts,
+        routed=sums.routed + w * routed,
+        busy=sums.busy + w * busy_n,
+        route_decisions=sums.route_decisions + w * routes,
+        sched_decisions=sums.sched_decisions + w * scheds,
+        final_N=N,
+    )
+
+
+# ---------------------------------------------------------------------------
+# BP family: Balanced-Pandas and Balanced-Pandas-Pod
+# ---------------------------------------------------------------------------
+
+
+class BPState(NamedTuple):
+    Q: jnp.ndarray          # int32 [M, 3] sub-queue lengths
+    busy: jnp.ndarray       # bool  [M]
+    rem: jnp.ndarray        # int32 [M] remaining service slots
+    cls: jnp.ndarray        # int32 [M] class of in-service task
+
+    @staticmethod
+    def zero(M: int) -> "BPState":
+        return BPState(
+            jnp.zeros((M, 3), jnp.int32), jnp.zeros(M, bool),
+            jnp.zeros(M, jnp.int32), jnp.zeros(M, jnp.int32),
+        )
+
+
+def _bp_workload(Q: jnp.ndarray, inv_rates: jnp.ndarray) -> jnp.ndarray:
+    """Paper §IV-A: W_m = Q^l/alpha + Q^k/beta + Q^r/gamma."""
+    return (Q.astype(jnp.float32) * inv_rates[None, :]).sum(axis=-1)
+
+
+def _bp_schedule(key, Q, busy, rem, cls, rates, service_dist, sigma):
+    """Idle servers start their own head-of-class task: local > rack > remote.
+    Purely local information — no cross-server messages (paper §IV-A)."""
+    has = Q > 0
+    pick = jnp.argmax(has, axis=1).astype(jnp.int32)   # first nonempty class
+    start = (~busy) & has.any(axis=1)
+    Q = Q - (jax.nn.one_hot(pick, 3, dtype=jnp.int32) * start[:, None].astype(jnp.int32))
+    dur = sample_durations(key, pick, rates, service_dist, sigma)
+    busy = busy | start
+    rem = jnp.where(start, dur, rem)
+    cls = jnp.where(start, pick, cls)
+    starts_by_class = (jax.nn.one_hot(pick, 3, dtype=jnp.float32)
+                       * start[:, None].astype(jnp.float32)).sum(axis=0)
+    return Q, busy, rem, cls, starts_by_class, start.sum().astype(jnp.float32)
+
+
+def _bp_route_batch(key, cluster, Q, cls_arr, locals_, mask, inv_rates, pod,
+                    sequential: bool, class_tiebreak: bool = True):
+    """Route a slot's arrival batch; returns (Q', sel_cls [A])."""
+    k_tie, k_pod, k_seq = jax.random.split(key, 3)
+    tie_rnd = jax.random.uniform(k_tie, (cluster.M,))
+
+    if sequential:
+        def route_one(Qc, xs):
+            cls_a, loc_a, valid, kr = xs
+            W = _bp_workload(Qc, inv_rates)
+            if pod is None:
+                sel, sc = route_balanced_pandas_full(W, cls_a, inv_rates,
+                                                     tie_rnd, class_tiebreak)
+            else:
+                kc, kt = jax.random.split(kr)
+                ci, cc, cv = pod_candidates(kc, cluster, loc_a, cls_a, pod)
+                sel, sc = route_pod_candidates(kt, W, ci, cc, cv, inv_rates)
+            Qc = Qc.at[sel, sc].add(valid.astype(jnp.int32))
+            return Qc, sc
+        keys = jax.random.split(k_seq, mask.shape[0])
+        Q, sel_cls = jax.lax.scan(route_one, Q, (cls_arr, locals_, mask, keys))
+    else:
+        W = _bp_workload(Q, inv_rates)
+        if pod is None:
+            sel, sel_cls = route_balanced_pandas_full(W, cls_arr, inv_rates,
+                                                      tie_rnd, class_tiebreak)
+        else:
+            kc, kt = jax.random.split(k_pod)
+            ci, cc, cv = pod_candidates(kc, cluster, locals_, cls_arr, pod)
+            sel, sel_cls = route_pod_candidates(kt, W, ci, cc, cv, inv_rates)
+        Q = Q.at[sel, sel_cls].add(mask.astype(jnp.int32))
+    return Q, sel_cls
+
+
+def _bp_step(state: BPState, sums: RawSums, key, *, cluster, rates, cfg,
+             lam, pod, a_max, measure, in_half2, class_tiebreak=True):
+    inv_rates = 1.0 / rates.as_array()
+    k_sched, k_arr, k_route = jax.random.split(key, 3)
+
+    busy, rem, completed = _progress_service(state.busy, state.rem)
+    Q, busy, rem, cls_serv, starts, n_started = _bp_schedule(
+        k_sched, state.Q, busy, rem, state.cls, rates, cfg.service_dist, cfg.sigma)
+
+    mask, locals_, cls_arr, clipped = _arrival_batch(k_arr, cluster, lam,
+                                                     a_max, need_cls=True)
+    Q, sel_cls = _bp_route_batch(k_route, cluster, Q, cls_arr, locals_, mask,
+                                 inv_rates, pod,
+                                 sequential=(cfg.route_mode == "sequential"),
+                                 class_tiebreak=class_tiebreak)
+
+    routed = (jax.nn.one_hot(sel_cls, 3, dtype=jnp.float32)
+              * mask[:, None].astype(jnp.float32)).sum(axis=0)
+
+    N = Q.sum().astype(jnp.float32) + busy.sum().astype(jnp.float32)
+    sums = _acc(sums, in_half2=in_half2, N=N,
+                arr=mask.sum().astype(jnp.float32), clipped=clipped,
+                comp=completed.sum().astype(jnp.float32), starts=starts,
+                routed=routed, busy_n=busy.sum().astype(jnp.float32),
+                routes=mask.sum().astype(jnp.float32), scheds=n_started,
+                measure=measure)
+    return BPState(Q, busy, rem, cls_serv), sums
+
+
+# ---------------------------------------------------------------------------
+# SQ family: JSQ-MaxWeight(-Pod) and JSQ-Priority
+# ---------------------------------------------------------------------------
+
+
+class SQState(NamedTuple):
+    Q: jnp.ndarray          # int32 [M] queue lengths (tasks local to server)
+    busy: jnp.ndarray
+    rem: jnp.ndarray
+    cls: jnp.ndarray
+
+    @staticmethod
+    def zero(M: int) -> "SQState":
+        return SQState(jnp.zeros(M, jnp.int32), jnp.zeros(M, bool),
+                       jnp.zeros(M, jnp.int32), jnp.zeros(M, jnp.int32))
+
+
+def _grant_conflicts(tgt, prio, has, Q, key, M):
+    """Resolve batched steal conflicts among S claimants: at most Q[n] grants
+    to queue n, higher-priority claimants first (prio = ascending-sort keys).
+    Returns bool [S] granted."""
+    S = tgt.shape[0]
+    rnd = jax.random.uniform(key, (S,))
+    tgt_s = jnp.where(has, tgt, M)  # sentinel sorts last
+    perm = jnp.lexsort((rnd,) + tuple(reversed(prio)) + (tgt_s,))
+    st = tgt_s[perm]
+    first = jnp.searchsorted(st, st, side="left")
+    rank = jnp.arange(S) - first
+    Q_ext = jnp.concatenate([Q, jnp.zeros(1, Q.dtype)])
+    grant_sorted = (rank < Q_ext[st]) & (st < M)
+    return jnp.zeros(S, bool).at[perm].set(grant_sorted)
+
+
+def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
+                 pod: Optional[PodSpec]):
+    """Batched scheduling for the single-queue family (see module docstring).
+
+    variant: "maxweight" (argmax alpha/beta/gamma-weighted queue lengths over
+    all M or over 1+d' Pod samples) or "priority" (own > longest-in-rack >
+    longest-anywhere)."""
+    M = cluster.M
+    S = min(cfg.s_max, M)
+    k_rows, k_cand, k_tie, k_grant, k_dur = jax.random.split(key, 5)
+
+    idle = ~busy
+    anyq = (Q > 0).any()
+    eligible = idle & ((Q > 0) | anyq)
+    # pick up to S eligible servers (random priority; the rest retry next slot)
+    rkey = jnp.where(eligible, jax.random.uniform(k_rows, (M,)), _INF)
+    order = jnp.argsort(rkey)
+    rows = order[:S]
+    act = eligible[rows]
+
+    qf = Q.astype(jnp.float32)
+    if variant == "maxweight" and pod is None:
+        rel = _relation_rows(cluster, rows)              # [S, M]
+        w = qf[None, :] * rates.as_array()[rel]
+        cand = jnp.broadcast_to((Q > 0)[None, :], (S, M))
+        rnd = jax.random.uniform(k_tie, (S, M))
+        tgt = lex_argmax(w, rnd, mask=cand)
+        val = jnp.take_along_axis(w, tgt[:, None], axis=1)[:, 0]
+        has = cand.any(axis=1) & act
+        prio = (-val,)
+    elif variant == "maxweight":
+        k1, k2 = jax.random.split(k_cand)
+        rack = sample_rack_peer(k1, cluster, rows, pod.d_rack)     # [S, dr]
+        remote = sample_remote_peer(k2, cluster, rows, pod.d_remote)
+        cand_idx = jnp.concatenate([rows[:, None], rack, remote], axis=1)
+        rel = jnp.concatenate([
+            jnp.full((S, 1), LOCAL, jnp.int32),
+            jnp.full((S, pod.d_rack), RACK, jnp.int32),
+            jnp.full((S, pod.d_remote), REMOTE, jnp.int32)], axis=1)
+        w = qf[cand_idx] * rates.as_array()[rel]
+        cand = Q[cand_idx] > 0
+        rnd = jax.random.uniform(k_tie, cand_idx.shape)
+        c = lex_argmax(w, rnd, mask=cand)
+        tgt = jnp.take_along_axis(cand_idx, c[:, None], axis=1)[:, 0]
+        val = jnp.take_along_axis(w, c[:, None], axis=1)[:, 0]
+        has = cand.any(axis=1) & act
+        prio = (-val,)
+    elif variant == "priority":
+        rel = _relation_rows(cluster, rows)              # [S, M]
+        nonempty = (Q > 0)[None, :]
+        own_has = Q[rows] > 0
+        rack_set = (rel == RACK) & nonempty
+        glob_set = (rel == REMOTE) & nonempty
+        rnd = jax.random.uniform(k_tie, (S, M))
+        wq = jnp.broadcast_to(qf[None, :], (S, M))
+        rack_tgt = lex_argmax(wq, rnd, mask=rack_set)
+        glob_tgt = lex_argmax(wq, rnd, mask=glob_set)
+        rack_any = rack_set.any(axis=1)
+        glob_any = glob_set.any(axis=1)
+        tgt = jnp.where(own_has, rows,
+                        jnp.where(rack_any, rack_tgt, glob_tgt))
+        has = (own_has | rack_any | glob_any) & act
+        class_rank = jnp.where(own_has, 0.0, jnp.where(rack_any, 1.0, 2.0))
+        prio = (class_rank, -qf[tgt])
+    else:
+        raise ValueError(variant)
+
+    granted = _grant_conflicts(tgt, prio, has, Q, k_grant, M)
+    Q = Q.at[tgt].add(-granted.astype(jnp.int32))
+    # locality class of (server rows[s], queue tgt[s]) — pairwise, O(S)
+    rack_of = cluster.rack_of
+    start_cls = jnp.where(rows == tgt, LOCAL,
+                          jnp.where(rack_of[rows] == rack_of[tgt],
+                                    RACK, REMOTE)).astype(jnp.int32)
+    dur = sample_durations(k_dur, start_cls, rates, cfg.service_dist, cfg.sigma)
+
+    busy = busy.at[rows].set(busy[rows] | granted)
+    rem = rem.at[rows].set(jnp.where(granted, dur, rem[rows]))
+    cls = cls.at[rows].set(jnp.where(granted, start_cls, cls[rows]))
+    starts = (jax.nn.one_hot(start_cls, 3, dtype=jnp.float32)
+              * granted[:, None].astype(jnp.float32)).sum(axis=0)
+    n_dec = has.sum().astype(jnp.float32)
+    return Q, busy, rem, cls, starts, n_dec
+
+
+def _sq_step(state: SQState, sums: RawSums, key, *, cluster, rates, cfg, lam,
+             variant, pod, a_max, measure, in_half2):
+    k_sched, k_arr, k_route = jax.random.split(key, 3)
+
+    busy, rem, completed = _progress_service(state.busy, state.rem)
+    Q, busy, rem, cls_serv, starts, n_sched = _sq_schedule(
+        k_sched, cluster, state.Q, busy, rem, state.cls, rates, cfg, variant, pod)
+
+    mask, locals_, _cls, clipped = _arrival_batch(k_arr, cluster, lam, a_max,
+                                                  need_cls=False)
+    if cfg.route_mode == "sequential":
+        def route_one(Qc, xs):
+            loc, valid, kr = xs
+            sel = route_jsq_local(kr, Qc, loc)
+            return Qc.at[sel].add(valid.astype(jnp.int32)), sel
+        keys = jax.random.split(k_route, a_max)
+        Q, _ = jax.lax.scan(route_one, Q, (locals_, mask, keys))
+    else:
+        sel = route_jsq_local(k_route, Q, locals_)
+        Q = Q.at[sel].add(mask.astype(jnp.int32))
+
+    N = Q.sum().astype(jnp.float32) + busy.sum().astype(jnp.float32)
+    sums = _acc(sums, in_half2=in_half2, N=N,
+                arr=mask.sum().astype(jnp.float32), clipped=clipped,
+                comp=completed.sum().astype(jnp.float32), starts=starts,
+                routed=jnp.zeros(3, jnp.float32),
+                busy_n=busy.sum().astype(jnp.float32),
+                routes=mask.sum().astype(jnp.float32), scheds=n_sched,
+                measure=measure)
+    return SQState(Q, busy, rem, cls_serv), sums
+
+
+# ---------------------------------------------------------------------------
+# FCFS: central queue, idle servers grab the head task
+# ---------------------------------------------------------------------------
+
+
+class FCFSState(NamedTuple):
+    C: jnp.ndarray          # int32 scalar: central queue length
+    busy: jnp.ndarray
+    rem: jnp.ndarray
+    cls: jnp.ndarray
+
+    @staticmethod
+    def zero(M: int) -> "FCFSState":
+        return FCFSState(jnp.zeros((), jnp.int32), jnp.zeros(M, bool),
+                         jnp.zeros(M, jnp.int32), jnp.zeros(M, jnp.int32))
+
+
+def _fcfs_step(state: FCFSState, sums: RawSums, key, *, cluster, rates, cfg,
+               lam, a_max, measure, in_half2):
+    M = cluster.M
+    G = min(cfg.s_max, M)
+    k_rank, k_loc, k_dur, k_arr = jax.random.split(key, 4)
+
+    busy, rem, completed = _progress_service(state.busy, state.rem)
+    idle = ~busy
+    r = jnp.where(idle, jax.random.uniform(k_rank, (M,)), _INF)
+    rows = jnp.argsort(r)[:G]
+    grant = idle[rows] & (jnp.arange(G) < state.C)
+    # locality of the grabbed task relative to the grabbing server: the task's
+    # replica triple is iid uniform and independent of everything else, so
+    # sampling it at dequeue time is distributionally identical.
+    locals_g = sample_locals(k_loc, cluster, G)            # [G, n_rep]
+    rack_of = cluster.rack_of
+    is_local = (locals_g == rows[:, None]).any(axis=1)
+    in_rack = (rack_of[locals_g] == rack_of[rows][:, None]).any(axis=1)
+    start_cls = jnp.where(is_local, LOCAL,
+                          jnp.where(in_rack, RACK, REMOTE)).astype(jnp.int32)
+    dur = sample_durations(k_dur, start_cls, rates, cfg.service_dist, cfg.sigma)
+    C = state.C - grant.sum().astype(jnp.int32)
+    busy = busy.at[rows].set(busy[rows] | grant)
+    rem = rem.at[rows].set(jnp.where(grant, dur, rem[rows]))
+    cls = state.cls.at[rows].set(jnp.where(grant, start_cls, state.cls[rows]))
+    starts = (jax.nn.one_hot(start_cls, 3, dtype=jnp.float32)
+              * grant[:, None].astype(jnp.float32)).sum(axis=0)
+
+    mask, _, _, clipped = _arrival_batch(k_arr, cluster, lam, a_max,
+                                         need_cls=False)
+    C = C + mask.sum().astype(jnp.int32)
+
+    N = C.astype(jnp.float32) + busy.sum().astype(jnp.float32)
+    sums = _acc(sums, in_half2=in_half2, N=N,
+                arr=mask.sum().astype(jnp.float32), clipped=clipped,
+                comp=completed.sum().astype(jnp.float32), starts=starts,
+                routed=jnp.zeros(3, jnp.float32),
+                busy_n=busy.sum().astype(jnp.float32),
+                routes=jnp.float32(0.0), scheds=grant.sum().astype(jnp.float32),
+                measure=measure)
+    return FCFSState(C, busy, rem, cls), sums
+
+
+# ---------------------------------------------------------------------------
+# Algorithm registry + entry point
+# ---------------------------------------------------------------------------
+
+# paper §V parameters: d = 8 = (2 rack-local + 6 remote) for BP-Pod routing;
+# d' = 12 = (6 + 6) for JSQ-MW-Pod scheduling.
+BP_POD_DEFAULT = PodSpec(d_rack=2, d_remote=6)
+JSQMW_POD_DEFAULT = PodSpec(d_rack=6, d_remote=6)
+
+ALGORITHMS = (
+    "fcfs",
+    "jsq_priority",
+    "jsq_maxweight",
+    "jsq_maxweight_pod",
+    "balanced_pandas",
+    "balanced_pandas_pod",
+)
+
+
+def _pod_for(algo: str, pod: Optional[PodSpec]) -> Optional[PodSpec]:
+    if pod is not None:
+        return pod
+    if algo == "balanced_pandas_pod":
+        return BP_POD_DEFAULT
+    if algo == "jsq_maxweight_pod":
+        return JSQMW_POD_DEFAULT
+    return None
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("algo", "cluster", "rates", "cfg", "pod", "a_max"))
+def _run(key, lam, *, algo: str, cluster: Cluster, rates: Rates,
+         cfg: SimConfig, pod: Optional[PodSpec], a_max: int):
+    half2_from = cfg.warmup + (cfg.T - cfg.warmup) // 2
+
+    def step(carry, t):
+        state, sums = carry
+        k = jax.random.fold_in(key, t)
+        measure = t >= cfg.warmup
+        in_half2 = t >= half2_from
+        kw = dict(cluster=cluster, rates=rates, cfg=cfg, lam=lam,
+                  a_max=a_max, measure=measure, in_half2=in_half2)
+        if algo in ("balanced_pandas", "balanced_pandas_pod",
+                    "balanced_pandas_randomtie"):
+            state, sums = _bp_step(
+                state, sums, k, pod=pod,
+                class_tiebreak=(algo != "balanced_pandas_randomtie"), **kw)
+        elif algo in ("jsq_maxweight", "jsq_maxweight_pod", "jsq_priority"):
+            variant = "priority" if algo == "jsq_priority" else "maxweight"
+            state, sums = _sq_step(state, sums, k, variant=variant, pod=pod, **kw)
+        elif algo == "fcfs":
+            state, sums = _fcfs_step(state, sums, k, **kw)
+        else:
+            raise ValueError(f"unknown algorithm {algo!r}")
+        return (state, sums), None
+
+    if algo in ("balanced_pandas", "balanced_pandas_pod",
+                "balanced_pandas_randomtie"):
+        state0 = BPState.zero(cluster.M)
+    elif algo == "fcfs":
+        state0 = FCFSState.zero(cluster.M)
+    else:
+        state0 = SQState.zero(cluster.M)
+
+    (state, sums), _ = jax.lax.scan(step, (state0, RawSums.zero()),
+                                    jnp.arange(cfg.T))
+    return sums
+
+
+def simulate(algo: str, cluster: Cluster, rates: Rates, load: float,
+             key: jax.Array, cfg: SimConfig = SimConfig(),
+             pod: Optional[PodSpec] = None) -> SimResult:
+    """Run one simulation and return derived metrics.
+
+    load: fraction of the capacity boundary (lambda = load * M * alpha).
+    """
+    lam = capacity_arrival_rate(cluster, rates, load)
+    pod = _pod_for(algo, pod)
+    a_max = cfg.resolve_a_max(lam)
+    sums = _run(key, jnp.float32(lam), algo=algo, cluster=cluster, rates=rates,
+                cfg=cfg, pod=pod, a_max=a_max)
+    return summarize(sums, algo, cluster, rates, pod)
+
+
+def simulate_grid(algo: str, cluster: Cluster, rates: Rates, loads,
+                  n_seeds: int, cfg: SimConfig = SimConfig(),
+                  pod: Optional[PodSpec] = None, seed0: int = 0) -> SimResult:
+    """Vectorized sweep: one compile, vmapped over loads x seeds.
+    Returns SimResult with leading dims [n_seeds, n_loads]."""
+    import numpy as _np
+    lam = jnp.array([capacity_arrival_rate(cluster, rates, l) for l in loads],
+                    jnp.float32)
+    pod = _pod_for(algo, pod)
+    a_max = cfg.resolve_a_max(float(_np.max(_np.asarray(lam))))
+    keys = jax.random.split(jax.random.PRNGKey(seed0), n_seeds)
+
+    def one(key, l):
+        return _run(key, l, algo=algo, cluster=cluster, rates=rates,
+                    cfg=cfg, pod=pod, a_max=a_max)
+
+    sums = jax.vmap(lambda k: jax.vmap(lambda l: one(k, l))(lam))(keys)
+    return summarize(sums, algo, cluster, rates, pod)
+
+
+def summarize(s: RawSums, algo: str, cluster: Cluster, rates: Rates,
+              pod: Optional[PodSpec]) -> SimResult:
+    slots = jnp.maximum(s.slots, 1.0)
+    mean_N = s.sum_N / slots
+    lam_hat = s.arrivals / slots
+    mean_T = mean_N / jnp.maximum(lam_hat, 1e-9)       # Little's law, slots
+    h = jnp.maximum(slots / 2.0, 1.0)
+    starts_total = jnp.maximum(s.starts.sum(-1, keepdims=True), 1.0)
+    routed_total = jnp.maximum(s.routed.sum(-1, keepdims=True), 1.0)
+    if algo in ("balanced_pandas", "balanced_pandas_pod",
+                "balanced_pandas_randomtie"):
+        route_cand = bp_candidates_per_route(cluster, pod)
+        sched_cand = 1  # own sub-queues only — purely local information
+    elif algo in ("jsq_maxweight", "jsq_maxweight_pod"):
+        route_cand = cluster.n_replicas
+        sched_cand = jsqmw_candidates_per_schedule(cluster, pod)
+    elif algo == "jsq_priority":
+        route_cand = cluster.n_replicas
+        sched_cand = cluster.M
+    else:  # fcfs
+        route_cand = 0
+        sched_cand = 1
+    return SimResult(
+        mean_tasks_in_system=mean_N,
+        mean_completion_slots=mean_T,
+        mean_completion_norm=mean_T * rates.alpha,
+        arrival_rate_hat=lam_hat,
+        throughput=s.completions / slots,
+        utilization=s.busy / (slots * cluster.M),
+        locality_fractions=s.starts / starts_total,
+        routed_fractions=s.routed / routed_total,
+        drift=(s.sum_N_h2 / h) / jnp.maximum(s.sum_N_h1 / h, 1e-9),
+        clip_fraction=s.clipped / jnp.maximum(s.arrivals + s.clipped, 1.0),
+        route_decisions=s.route_decisions,
+        sched_decisions=s.sched_decisions,
+        route_candidates_per_decision=jnp.float32(route_cand),
+        sched_candidates_per_decision=jnp.float32(sched_cand),
+    )

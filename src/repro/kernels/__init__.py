@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the scheduler's compute hot spots.
+
+weighted_argmin — O(M) Balanced-Pandas routing scan (the baseline the paper
+                  improves on); pod_route — O(d) power-of-d routing;
+queue_update    — fused scatter + workload recompute.  ref.py holds the
+pure-jnp oracles; ops.py the jit'd wrappers (interpret=True off-TPU).
+"""
+from . import ref
+from .ops import pod_route, queue_update, weighted_argmin
+
+__all__ = ["ref", "pod_route", "queue_update", "weighted_argmin"]

@@ -1,0 +1,38 @@
+"""Jit'd public wrappers for the scheduler kernels.
+
+``interpret`` defaults to True off-TPU (the Pallas interpreter executes the
+kernel body on CPU for correctness); on a real TPU backend the same calls
+compile to Mosaic.  The wrappers here are what the production router
+(repro.sched.router) calls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .pod_route import pod_route as _pod_route
+from .queue_update import queue_update as _queue_update
+from .weighted_argmin import weighted_argmin as _weighted_argmin
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def weighted_argmin(W, cls, inv_rates, **kw):
+    """Balanced-Pandas O(M) batched routing (see kernels/weighted_argmin.py)."""
+    kw.setdefault("interpret", _interpret_default())
+    return _weighted_argmin(W, cls, inv_rates, **kw)
+
+
+def pod_route(W, cand_idx, cand_cls, valid, inv_rates, **kw):
+    """Balanced-Pandas-Pod O(d) batched routing (see kernels/pod_route.py)."""
+    kw.setdefault("interpret", _interpret_default())
+    return _pod_route(W, cand_idx, cand_cls, valid, inv_rates, **kw)
+
+
+def queue_update(Q, sel, sel_cls, valid, inv_rates, **kw):
+    """Fused routing-batch scatter + workload recompute (see
+    kernels/queue_update.py)."""
+    kw.setdefault("interpret", _interpret_default())
+    return _queue_update(Q, sel, sel_cls, valid, inv_rates, **kw)

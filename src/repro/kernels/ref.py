@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the scheduler kernels.
+
+These define the exact semantics the Pallas kernels must reproduce
+(tests/test_kernels.py sweeps shapes & dtypes and asserts allclose / exact
+index equality).  Tie-breaking contract everywhere: lowest index wins.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weighted_argmin_ref(W: jnp.ndarray, cls: jnp.ndarray,
+                        inv_rates: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Balanced-Pandas O(M) routing: full argmin of weighted workload.
+
+    W: [M] workloads; cls: [B, M] int32 locality classes (0/1/2);
+    inv_rates: [3] = 1/(alpha,beta,gamma).
+    Returns (sel [B] int32, val [B] float32): argmin_m W[m]*inv_rates[cls[b,m]]
+    (first index on ties) and the winning score.
+    """
+    scores = W[None, :].astype(jnp.float32) * inv_rates.astype(jnp.float32)[cls]
+    sel = jnp.argmin(scores, axis=1).astype(jnp.int32)
+    val = jnp.min(scores, axis=1)
+    return sel, val
+
+
+def pod_route_ref(W: jnp.ndarray, cand_idx: jnp.ndarray, cand_cls: jnp.ndarray,
+                  valid: jnp.ndarray, inv_rates: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Balanced-Pandas-Pod O(d) routing: argmin over an explicit candidate list.
+
+    W: [M]; cand_idx/cand_cls: [B, C] int32; valid: [B, C] bool;
+    inv_rates: [3].  Returns (sel [B] int32 server index, val [B] score).
+    Invalid candidate slots never win (score +inf); ties -> lowest slot c,
+    and the returned server is cand_idx[b, c*].
+    """
+    w = W.astype(jnp.float32)[cand_idx]                      # [B, C]
+    scores = w * inv_rates.astype(jnp.float32)[cand_cls]
+    scores = jnp.where(valid, scores, jnp.inf)
+    c = jnp.argmin(scores, axis=1)
+    sel = jnp.take_along_axis(cand_idx, c[:, None], axis=1)[:, 0].astype(jnp.int32)
+    val = jnp.min(scores, axis=1)
+    return sel, val
+
+
+def queue_update_ref(Q: jnp.ndarray, sel: jnp.ndarray, sel_cls: jnp.ndarray,
+                     valid: jnp.ndarray, inv_rates: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused post-routing queue scatter + workload recompute.
+
+    Q: [M, 3] int32 sub-queue lengths; sel/sel_cls: [B] int32; valid: [B] bool.
+    Returns (Q_new [M,3] int32, W [M] float32) where
+    Q_new = Q + scatter_add(one_hot(sel) x one_hot(sel_cls) * valid) and
+    W = Q_new @ inv_rates (paper's W_m = Q^l/a + Q^k/b + Q^r/g).
+    """
+    upd = jnp.zeros_like(Q).at[sel, sel_cls].add(valid.astype(Q.dtype))
+    Q_new = Q + upd
+    W = (Q_new.astype(jnp.float32) * inv_rates.astype(jnp.float32)[None, :]).sum(-1)
+    return Q_new, W

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: batched weighted-workload argmin over all M servers.
+
+This is the compute hot spot of the *baseline* Balanced-Pandas central
+scheduler: for every task in a routing batch, scan all M servers' workloads
+weighted by the task's locality class (W/alpha locals, W/beta rack-locals,
+W/gamma remotes) and take the argmin (paper §IV-A).  At data-center scale
+this is a [B, M] streaming reduction — the O(M) cost the paper's Pod variant
+eliminates — so we tile M through VMEM and keep a running (min, argmin)
+accumulator per task, the canonical cross-block reduction pattern.
+
+TPU mapping notes (DESIGN.md §2): scores are formed on the VPU
+(8x128 lanes); the M axis is tiled in multiples of 128 lanes; the running
+accumulator lives in the output block, which maps to the same block for every
+M-step of the grid (sequential TPU grid => safe accumulation).  Tie-break:
+lowest server index (block order + first-index argmin within a block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUB = 8
+
+
+def _kernel(w_ref, cls_ref, invr_ref, val_ref, idx_ref, *, m_tile: int):
+    j = pl.program_id(1)
+
+    w = w_ref[...].astype(jnp.float32)          # [1, m_tile]
+    cls = cls_ref[...]                          # [b_tile, m_tile] int32
+    ir0 = invr_ref[0, 0]
+    ir1 = invr_ref[0, 1]
+    ir2 = invr_ref[0, 2]
+    # class -> 1/rate via selects (avoids an in-kernel gather; cls in {0,1,2});
+    # padded lanes carry cls=3 and are masked to +inf AFTER the multiply so a
+    # zero-workload pad lane cannot produce 0*inf = NaN.
+    factor = jnp.where(cls == 0, ir0, jnp.where(cls == 1, ir1, ir2))
+    scores = jnp.where(cls < 3, w * factor, jnp.inf)   # [b_tile, m_tile]
+
+    local_val = jnp.min(scores, axis=1)
+    local_arg = jnp.argmin(scores, axis=1).astype(jnp.int32) + j * m_tile
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = jnp.full_like(val_ref, jnp.inf)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    better = local_val < val_ref[...]            # strict: earlier block wins ties
+    val_ref[...] = jnp.where(better, local_val, val_ref[...])
+    idx_ref[...] = jnp.where(better, local_arg, idx_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("b_tile", "m_tile", "interpret"))
+def weighted_argmin(W: jnp.ndarray, cls: jnp.ndarray, inv_rates: jnp.ndarray,
+                    *, b_tile: int = SUB, m_tile: int = 4 * LANE,
+                    interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """See ref.weighted_argmin_ref.  W: [M]; cls: [B, M] int32; inv_rates: [3].
+
+    Pads B up to b_tile and M up to m_tile (padded servers get class 3 =>
+    +inf score; padded tasks are sliced off), then launches a
+    (B/b_tile, M/m_tile) grid.  VMEM per step ~= b_tile*m_tile*8 bytes.
+    """
+    B, M = cls.shape
+    Bp = -(-B // b_tile) * b_tile
+    Mp = -(-M // m_tile) * m_tile
+    W_p = jnp.pad(W.astype(jnp.float32), (0, Mp - M))[None, :]     # [1, Mp]
+    cls_p = jnp.pad(cls.astype(jnp.int32), ((0, Bp - B), (0, Mp - M)),
+                    constant_values=3)
+    invr = jnp.pad(inv_rates.astype(jnp.float32), (0, 1))[None, :]  # [1, 4]
+
+    grid = (Bp // b_tile, Mp // m_tile)
+    val, idx = pl.pallas_call(
+        functools.partial(_kernel, m_tile=m_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m_tile), lambda i, j: (0, j)),
+            pl.BlockSpec((b_tile, m_tile), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 4), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((b_tile,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(W_p, cls_p, invr)
+    return idx[:B], val[:B]

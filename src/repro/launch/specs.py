@@ -1,0 +1,129 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns the exact abstract inputs each cell's
+step function takes — weak-type-correct, shardable, zero allocation — plus
+the logical sharding rules the cell needs.  Modality frontends are STUBS
+per the assignment: vlm cells get precomputed patch embeddings, encdec
+cells get precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models import cache_pspecs, init_cache, init_params, param_pspecs
+from ..models.sharding import logical_pspec, set_rules
+from ..optim.adamw import AdamWConfig, init_opt_state, opt_pspecs
+from ..train.train_step import TrainState, init_train_state
+
+
+def rules_for(cfg: ArchConfig, shape: ShapeSpec, mesh, extra=None) -> dict:
+    """Per-cell logical-rule overrides (the baseline sharding plan;
+    EXPERIMENTS.md §Perf hillclimbs pass ``extra`` via dryrun --variant)."""
+    over = {}
+    if cfg.fsdp:
+        over["embed_fsdp"] = ("data",)          # ZeRO-3 params+opt over data
+    if shape.kind == "decode":
+        if shape.global_batch == 1:
+            over["batch"] = None                 # cannot shard batch=1
+            over["cache_seq"] = ("data", "model")
+        else:
+            over["cache_seq"] = "model"          # KV sharded over seq x model
+    if extra:
+        over.update(extra)
+    return set_rules(over, mesh_axes=mesh.axis_names)
+
+
+def opt_config_for(cfg: ArchConfig) -> AdamWConfig:
+    # trillion-param archs: int8 moments are required to fit (DESIGN.md §4)
+    return AdamWConfig(moment_dtype="int8" if cfg.fsdp else "float32")
+
+
+def _axis_size(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axes is None:
+        return 1
+    if isinstance(axes, tuple):
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        return n
+    return sizes[axes]
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh) -> P:
+    """Drop mesh axes that do not evenly divide their dim (GSPMD rejects
+    uneven *input* shardings).  Replication is the safe fallback; archs that
+    hit this in a hot tensor get a per-arch rule instead (see rules_for)."""
+    out = []
+    for i, axes in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        n = _axis_size(mesh, axes)
+        out.append(axes if n > 1 and shape[i] % n == 0 else
+                   (axes if n == 1 else None))
+    return P(*out)
+
+
+def _sharded_sds(tree, spec_tree, mesh):
+    def f(sds, spec):
+        spec = sanitize_spec(spec, sds.shape, mesh)
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(f, tree, spec_tree, is_leaf=lambda x: False)
+
+
+def abstract_train_state(cfg: ArchConfig, mesh) -> tuple:
+    """(TrainState SDS with shardings, TrainState PartitionSpecs)."""
+    ocfg = opt_config_for(cfg)
+    sds = jax.eval_shape(
+        functools.partial(init_train_state, cfg, ocfg),
+        jax.random.PRNGKey(0))
+    pspecs = TrainState(params=param_pspecs(cfg),
+                        opt=opt_pspecs(param_pspecs(cfg), ocfg))
+    return _sharded_sds(sds, pspecs, mesh), pspecs
+
+
+def abstract_params(cfg: ArchConfig, mesh):
+    sds = jax.eval_shape(functools.partial(init_params, cfg),
+                         jax.random.PRNGKey(0))
+    pspecs = param_pspecs(cfg)
+    return _sharded_sds(sds, pspecs, mesh), pspecs
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+                with_labels: bool) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    bsh = NamedSharding(mesh, logical_pspec("batch", None))
+    esh = NamedSharding(mesh, logical_pspec("batch", None, None))
+    S_txt = S - cfg.n_img_tokens if cfg.family == "vlm" else S
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S_txt), jnp.int32, sharding=bsh)}
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct((B, S_txt), jnp.int32,
+                                               sharding=bsh)
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16, sharding=esh)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.bfloat16, sharding=esh)
+    return batch
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    sds = jax.eval_shape(
+        functools.partial(init_cache, cfg, shape.global_batch, shape.seq_len))
+    pspecs = cache_pspecs(cfg)
+    return _sharded_sds(sds, pspecs, mesh), pspecs
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    B = shape.global_batch
+    bsh = NamedSharding(mesh, logical_pspec("batch", None))
+    psh = NamedSharding(mesh, logical_pspec("batch"))
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=bsh)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=psh)
+    return tokens, pos

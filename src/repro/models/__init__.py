@@ -1,0 +1,18 @@
+"""Model zoo: every assigned architecture family in pure JAX."""
+from .layers import chunked_softmax_xent, flash_attention, logits_fn
+from .sharding import constrain, get_rules, logical_pspec, set_rules
+from .transformer import (
+    Cache,
+    cache_pspecs,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_pspecs,
+)
+
+__all__ = [
+    "Cache", "cache_pspecs", "chunked_softmax_xent", "constrain",
+    "decode_step", "flash_attention", "forward", "get_rules", "init_cache",
+    "init_params", "logical_pspec", "logits_fn", "param_pspecs", "set_rules",
+]

@@ -1,0 +1,422 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (flash-chunked
+train/prefill path + cache-reading decode path), SwiGLU MLP, embeddings.
+
+Conventions:
+  - params are plain nested dicts of jnp arrays; every ``*_params`` init has a
+    matching ``*_pspecs`` returning the same-structure PartitionSpec tree
+    (logical axes; see sharding.py).
+  - compute dtype is bf16 with fp32 islands (norm statistics, softmax,
+    logsumexp); params are stored in cfg.dtype.
+  - the train/prefill attention is flash-style (online softmax over KV
+    blocks) so activation memory is O(S * block) instead of O(S^2) — the
+    32k-prefill cells do not fit any other way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import constrain, logical_pspec as LP
+
+F32 = jnp.float32
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, F32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, shape: tuple, dtype) -> jnp.ndarray:
+    """Fan-in scaled truncated-normal init."""
+    return _init(key, shape, d_in ** -0.5, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_params(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_pspecs() -> dict:
+    return {"scale": LP(None)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, hd]; positions: [B, S] (absolute).  Pairs (even, odd)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions[..., None].astype(F32) * freqs          # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-chunked attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _to_blocks(x, n, blk):
+    B, S, H, hd = x.shape
+    return x.reshape(B, n, blk, H, hd).transpose(1, 0, 3, 2, 4)  # [n,B,H,blk,hd]
+
+
+def _fa_forward(q, k, v, causal, q_block, kv_block):
+    """Returns (out [B,Sq,H,hd], lse [nq,B,H,q_block])."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    nq, nk = Sq // q_block, Sk // kv_block
+    scale = hd ** -0.5
+    qb = _to_blocks(q, nq, q_block)
+    kb = _to_blocks(k, nk, kv_block)
+    vb = _to_blocks(v, nk, kv_block)
+
+    def one_q(_, qi_and_q):
+        qi, qq = qi_and_q                      # qq [B, H, qb, hd]
+        qq = qq.astype(F32) * scale
+
+        def kv_step(carry, ki_and_kv):
+            ki, kk, vv = ki_and_kv
+            m, l, acc = carry
+            s = jnp.einsum("bhqd,bhkd->bhqk", qq, kk.astype(F32))
+            if causal:
+                qpos = qi * q_block + jnp.arange(q_block)
+                kpos = ki * kv_block + jnp.arange(kv_block)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - safe_m[..., None])
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vv.astype(F32))
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, H, q_block), -jnp.inf, F32),
+                jnp.zeros((B, H, q_block), F32),
+                jnp.zeros((B, H, q_block, hd), F32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = jnp.where(jnp.isfinite(m), m + jnp.log(jnp.maximum(l, 1e-30)),
+                        -jnp.inf)
+        return None, (out.astype(q.dtype), lse)
+
+    _, (ob, lse) = jax.lax.scan(one_q, None, (jnp.arange(nq), qb))
+    out = ob.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, hd)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, causal, q_block, kv_block):
+    return _fa_forward(q, k, v, causal, q_block, kv_block)[0]
+
+
+def _flash_fwd(q, k, v, causal, q_block, kv_block):
+    out, lse = _fa_forward(q, k, v, causal, q_block, kv_block)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_block, kv_block, res, do):
+    """FlashAttention-2 backward: recompute p per (q, kv) block pair from
+    the saved logsumexp; only O(S*hd) residuals were kept by the forward.
+    Scan carries are O(block) (dkj/dvj per step) plus one dq accumulator —
+    this is what keeps the 32k-train backward inside HBM (the naive scan
+    backward stores the [B,H,qb,hd] accumulator per kv step)."""
+    q, k, v, o, lse = res
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    nq, nk = Sq // q_block, Sk // kv_block
+    scale = hd ** -0.5
+
+    qb = _to_blocks(q, nq, q_block).astype(F32)          # [nq,B,H,qb,hd]
+    kb = _to_blocks(k, nk, kv_block).astype(F32)
+    vb = _to_blocks(v, nk, kv_block).astype(F32)
+    dob = _to_blocks(do, nq, q_block).astype(F32)
+    ob = _to_blocks(o, nq, q_block).astype(F32)
+    Dd = jnp.sum(dob * ob, axis=-1)                      # [nq,B,H,qb]
+
+    def kv_step(dq_full, j_kv):
+        j, kk, vv = j_kv
+
+        def q_step(carry, i_q):
+            dkj, dvj, dq_acc = carry
+            i, qq, doi, lsei, Di = i_q
+            s = jnp.einsum("bhqd,bhkd->bhqk", qq * scale, kk)
+            if causal:
+                qpos = i * q_block + jnp.arange(q_block)
+                kpos = j * kv_block + jnp.arange(kv_block)
+                s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None],
+                              s, -jnp.inf)
+            safe_lse = jnp.where(jnp.isfinite(lsei), lsei, 0.0)
+            p = jnp.exp(s - safe_lse[..., None])          # masked -> 0
+            dp = jnp.einsum("bhqd,bhkd->bhqk", doi, vv)
+            ds = p * (dp - Di[..., None]) * scale
+            dqi = jnp.einsum("bhqk,bhkd->bhqd", ds, kk)
+            dkj = dkj + jnp.einsum("bhqk,bhqd->bhkd", ds, qq)
+            dvj = dvj + jnp.einsum("bhqk,bhqd->bhkd", p, doi)
+            dq_acc = dq_acc.at[i].add(dqi)
+            return (dkj, dvj, dq_acc), None
+
+        zk = jnp.zeros((B, H, kv_block, hd), F32)
+        (dkj, dvj, dq_full), _ = jax.lax.scan(
+            q_step, (zk, zk, dq_full),
+            (jnp.arange(nq), qb, dob, lse, Dd))
+        return dq_full, (dkj, dvj)
+
+    dq0 = jnp.zeros((nq, B, H, q_block, hd), F32)
+    dq_full, (dk_b, dv_b) = jax.lax.scan(kv_step, dq0,
+                                         (jnp.arange(nk), kb, vb))
+
+    def _from_blocks(x, S):
+        return x.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+
+    return (_from_blocks(dq_full, Sq).astype(q.dtype),
+            _from_blocks(dk_b, Sk).astype(k.dtype),
+            _from_blocks(dv_b, Sk).astype(v.dtype))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool, q_block: int, kv_block: int) -> jnp.ndarray:
+    """Online-softmax attention with a FlashAttention-2 style custom VJP.
+    q,k,v: [B, S, H, hd] (KV already repeated to H heads).  Activation
+    residency is O(S*hd) (out + logsumexp); the backward recomputes the
+    probability blocks.  The causal path still *computes* masked blocks
+    (2x attention-FLOPs waste in the roofline — §Perf iterates on this)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    assert Sq % q_block == 0 and Sk % kv_block == 0
+    return _flash(q, k, v, causal, q_block, kv_block)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def head_mask(cfg) -> Optional[jnp.ndarray]:
+    """[padded_heads] 1/0 mask (None when no padding).  Padded q-heads sit at
+    the tail of each kv group, so q-head i keeps kv head i // padded_groups."""
+    Hp, H = cfg.padded_heads, cfg.n_heads
+    if Hp == H:
+        return None
+    Gp, G = cfg.padded_q_groups, cfg.q_groups
+    if Gp != G:      # GQA: pad within each group
+        return ((jnp.arange(Hp) % Gp) < G).astype(F32)
+    return (jnp.arange(Hp) < H).astype(F32)   # MHA: pad q+kv together
+
+
+def attention_params(key, cfg, d_model: Optional[int] = None) -> dict:
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    Hp, Kvp = cfg.padded_heads, cfg.padded_kv_heads
+    dt = dtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d, (d, Hp, hd), dt),
+        "wk": dense_init(k2, d, (d, Kvp, hd), dt),
+        "wv": dense_init(k3, d, (d, Kvp, hd), dt),
+        "wo": dense_init(k4, cfg.n_heads * hd, (Hp, hd, d), dt),
+    }
+    mask = head_mask(cfg)
+    if mask is not None:   # zero the padded heads; the fwd mask keeps them 0
+        p["wq"] = p["wq"] * mask[None, :, None].astype(dt)
+        p["wo"] = p["wo"] * mask[:, None, None].astype(dt)
+    return p
+
+
+def attention_pspecs() -> dict:
+    return {
+        "wq": LP("embed_fsdp", "heads", "head_dim"),
+        "wk": LP("embed_fsdp", "kv_heads", "head_dim"),
+        "wv": LP("embed_fsdp", "kv_heads", "head_dim"),
+        "wo": LP("heads", "head_dim", "embed_fsdp"),
+    }
+
+
+def _repeat_kv(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """[B, S, Kv, hd] -> [B, S, Kv*groups, hd]."""
+    if groups == 1:
+        return x
+    B, S, Kv, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (B, S, Kv, groups, hd)
+                            ).reshape(B, S, Kv * groups, hd)
+
+
+def attention_fwd(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray, *,
+                  causal: bool = True, use_rope: bool = True,
+                  kv_override: Optional[tuple] = None) -> jnp.ndarray:
+    """Train/prefill path.  x: [B, S, D] -> [B, S, D].  kv_override feeds
+    cross-attention (keys/values come from the encoder stream)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if kv_override is None:
+        src = x
+    else:
+        src = kv_override[0]
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        kpos = positions if kv_override is None else kv_override[1]
+        k = rope(k, kpos, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = _repeat_kv(k, cfg.padded_q_groups)
+    v = _repeat_kv(v, cfg.padded_q_groups)
+    k = constrain(k, "batch", "seq", "heads", None)
+    o = flash_attention(q, k, v, causal=causal,
+                        q_block=cfg.q_block, kv_block=cfg.kv_block)
+    mask = head_mask(cfg)
+    if mask is not None:
+        o = o * mask[None, None, :, None].astype(o.dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def attention_decode(p: dict, cfg, x: jnp.ndarray, cache_k: jnp.ndarray,
+                     cache_v: jnp.ndarray, pos: jnp.ndarray, *,
+                     use_rope: bool = True, append: bool = True):
+    """Decode path: x [B, 1, D]; cache_k/v [B, S, Kv, hd]; pos [B] int32.
+
+    Grouped-query attention directly against the (sequence-sharded) cache —
+    no KV repeat is materialized.  Returns (out [B,1,D], cache_k', cache_v').
+    """
+    B, S, Kv, hd = cache_k.shape
+    G = cfg.padded_q_groups
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])          # [B,1,Hp,hd]
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])      # [B,1,Kv,hd]
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if use_rope:
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k_new = rope(k_new, pos[:, None], cfg.rope_theta)
+    if append:
+        onehot = (jnp.arange(S)[None, :] == pos[:, None]).astype(cache_k.dtype)
+        cache_k = cache_k + onehot[:, :, None, None] * k_new.astype(cache_k.dtype)
+        cache_v = cache_v + onehot[:, :, None, None] * v_new.astype(cache_v.dtype)
+        cache_k = constrain(cache_k, "batch", "cache_seq", "kv_heads", None)
+        cache_v = constrain(cache_v, "batch", "cache_seq", "kv_heads", None)
+    qg = q.reshape(B, Kv, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(F32),
+                   cache_k.astype(F32)) * (hd ** -0.5)
+    mask = (jnp.arange(S)[None, :] <= pos[:, None])[:, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    pw = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", pw, cache_v.astype(F32))
+    o = o.reshape(B, 1, Kv * G, hd).astype(x.dtype)
+    mask = head_mask(cfg)
+    if mask is not None:
+        o = o * mask[None, None, :, None].astype(o.dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, d, (d, d_ff), dtype),
+        "w3": dense_init(k2, d, (d, d_ff), dtype),
+        "w2": dense_init(k3, d_ff, (d_ff, d), dtype),
+    }
+
+
+def mlp_pspecs() -> dict:
+    return {"w1": LP("embed_fsdp", "ff"), "w3": LP("embed_fsdp", "ff"),
+            "w2": LP("ff", "embed_fsdp")}
+
+
+def mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("bsd,df->bsf", x, p["w1"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w3"])
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    h = constrain(h, "batch", "seq", "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_params(key, cfg) -> dict:
+    V = cfg.padded_vocab
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": _init(k1, (V, cfg.d_model), 1.0, dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, cfg.d_model, (cfg.d_model, V), dt)
+    return p
+
+
+def embed_pspecs(cfg) -> dict:
+    p = {"tok": LP("vocab", "embed_fsdp")}
+    if not cfg.tie_embeddings:
+        p["head"] = LP("embed_fsdp", "vocab")
+    return p
+
+
+def embed_lookup(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    out = jnp.take(p["tok"], tokens, axis=0)
+    return constrain(out, "batch", "seq", None)
+
+
+def logits_fn(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    w = p["tok"].T if "head" not in p else p["head"]
+    out = jnp.einsum("bsd,dv->bsv", x, w)
+    return constrain(out, "batch", "seq", "vocab")
+
+
+def chunked_softmax_xent(embed_p: dict, x: jnp.ndarray, labels: jnp.ndarray,
+                         vocab: int, chunk: int = 256) -> jnp.ndarray:
+    """Mean cross-entropy, computing logits seq-chunk by seq-chunk so the
+    [B, S, V] tensor never materializes (V is model-sharded; the fp32
+    logsumexp stays per-chunk)."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    assert S % chunk == 0
+    xc = x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def one(carry, xl):
+        xx, ll = xl
+        logits = logits_fn(embed_p, xx).astype(F32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        valid = ll < vocab                       # padded labels masked out
+        return carry + jnp.sum(jnp.where(valid, lse - gold, 0.0)), None
+
+    total, _ = jax.lax.scan(one, jnp.zeros((), F32), (xc, lc))
+    return total / (B * S)

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN with group-local capacity dispatch (EP-shardable).
+
+Dispatch is computed *per data-parallel group* (``dispatch_groups`` = number
+of data shards): tokens are reshaped to [G, T_local], the top-k assignment is
+sorted within each group, and tokens beyond the per-group per-expert
+capacity C = ceil(T_local * k / E * capacity_factor) are dropped (GShard-
+style).  Because the sort, gather and scatter all act along the *local*
+token axis, GSPMD partitions them without cross-group communication; the
+only collective the layer needs is the expert-parallel combine all-reduce
+over the model axis — the same volume as a tensor-parallel FFN.  DESIGN.md
+§4 and EXPERIMENTS.md §Roofline discuss the resulting collective terms.
+
+Router extras (production requirements): switch load-balance auxiliary loss
+and router z-loss, both returned for the trainer to weight.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32, dense_init, dtype_of, mlp, mlp_params, mlp_pspecs
+from .sharding import constrain, logical_pspec as LP
+
+
+def moe_params(key, cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, (d, e), jnp.float32),
+        "w1": dense_init(ks[1], d, (e, d, f), dt),
+        "w3": dense_init(ks[2], d, (e, d, f), dt),
+        "w2": dense_init(ks[3], f, (e, f, d), dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_params(ks[4], d, cfg.n_shared_experts * cfg.moe_d_ff, dt)
+    return p
+
+
+def moe_pspecs(cfg) -> dict:
+    p = {
+        "router": LP("embed_fsdp", None),
+        "w1": LP("expert", "embed_fsdp", "moe_ff"),
+        "w3": LP("expert", "embed_fsdp", "moe_ff"),
+        "w2": LP("expert", "moe_ff", "embed_fsdp"),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_pspecs()
+    return p
+
+
+def moe_apply(p: dict, cfg, x: jnp.ndarray, dispatch_groups: int = 1
+              ) -> tuple[jnp.ndarray, dict]:
+    """x: [B, S, D] -> ([B, S, D], aux losses {lb_loss, z_loss})."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    G = min(dispatch_groups, T)
+    Tl = T // G
+    assert T % G == 0, (T, G)
+    C = max(8, int(-(-Tl * K * cfg.capacity_factor // E)))
+
+    gax = "batch" if G > 1 else None   # a size-1 group dim must not claim
+    xf = x.reshape(G, Tl, D)           # the data axis away from moe_ff
+    xf = constrain(xf, gax, None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xf.astype(F32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                 # [G, Tl, K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses (Switch LB + z-loss)
+    me = probs.mean(axis=(0, 1))                            # [E]
+    ce = jnp.zeros(E, F32).at[top_e.reshape(-1)].add(
+        jnp.ones(top_e.size, F32)) / (T * K)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # --- group-local sort-based dispatch -------------------------------
+    e_flat = top_e.reshape(G, Tl * K)
+    t_flat = jnp.broadcast_to(jnp.arange(Tl)[:, None], (Tl, K)).reshape(-1)
+    t_flat = jnp.broadcast_to(t_flat[None], (G, Tl * K))
+    w_flat = top_w.reshape(G, Tl * K)
+
+    order = jnp.argsort(e_flat, axis=-1)
+    se = jnp.take_along_axis(e_flat, order, -1)
+    st = jnp.take_along_axis(t_flat, order, -1)
+    sw = jnp.take_along_axis(w_flat, order, -1)
+    first = jax.vmap(lambda row: jnp.searchsorted(row, row, side="left"))(se)
+    pos = jnp.arange(Tl * K)[None, :] - first
+    keep = pos < C
+    slot = se * C + jnp.minimum(pos, C - 1)                # [G, Tl*K]
+
+    gidx = jnp.arange(G)[:, None]
+    disp = jnp.full((G, E * C), Tl, jnp.int32).at[gidx, slot].set(
+        jnp.where(keep, st, Tl).astype(jnp.int32), mode="drop")
+
+    x_pad = jnp.concatenate([xf, jnp.zeros((G, 1, D), xf.dtype)], axis=1)
+    x_disp = jnp.take_along_axis(
+        x_pad, disp[..., None], axis=1).reshape(G, E, C, D)
+    x_disp = constrain(x_disp, gax, "expert", "capacity", None)
+
+    g = jnp.einsum("gecd,edf->gecf", x_disp, p["w1"])
+    u = jnp.einsum("gecd,edf->gecf", x_disp, p["w3"])
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    h = constrain(h, gax, "expert", "capacity", "moe_ff")
+    y = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+    y = constrain(y, gax, "expert", "capacity", None)
+
+    # --- combine as GATHER + per-token reduction --------------------------
+    # A scatter-add combine is opaque to GSPMD: it materialized the output
+    # replicated ([G,Tl,D] f32 per device) and all-reduced 2 x 7.5 GB per
+    # layer-microbatch on kimi-k2 (§Perf).  Inverting the sort permutation
+    # turns the combine into a batched gather (token t, choice j reads its
+    # expert slot) which partitions exactly like the dispatch gather.
+    inv = jnp.argsort(order, axis=-1)
+    slot_tok = jnp.take_along_axis(
+        jnp.where(keep, slot, E * C), inv, axis=-1)          # [G, Tl*K]
+    y_pad = jnp.concatenate(
+        [y.reshape(G, E * C, D),
+         jnp.zeros((G, 1, D), y.dtype)], axis=1)
+    contrib = jnp.take_along_axis(y_pad, slot_tok[..., None], axis=1)
+    out = (contrib.reshape(G, Tl, K, D).astype(F32)
+           * top_w[..., None]).sum(axis=2)
+    out = constrain(out.astype(x.dtype), gax, None, None)
+
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], xf)
+    return out.reshape(B, S, D), {"lb_loss": lb_loss, "z_loss": z_loss}

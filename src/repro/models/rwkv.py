@@ -1,0 +1,223 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention (time-mix)
+plus squared-ReLU channel-mix.
+
+Chunked time-mix: within a chunk, the pairwise decay
+exp(cum_t - logw_t - cum_s) is always <= 1 for s < t (cum is a running sum
+of logw <= 0), so the [Lc, Lc, hd] decay tensor is numerically safe in f32;
+across chunks a scan carries the per-head [hd, hd] state.  Decode is a pure
+O(1) state update — this is why rwkv6-7b runs the long_500k cell.
+
+Simplification vs the published block (DESIGN.md §5): the token-shift mixing
+coefficients are static learned vectors (the paper adds a data-dependent
+LoRA on all five); the decay w keeps its full data-dependent LoRA, which is
+the part that defines RWKV-6.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32, dense_init, dtype_of
+from .sharding import constrain, logical_pspec as LP
+
+_LORA = 64
+
+
+class RWKVState(NamedTuple):
+    wkv: jnp.ndarray        # [B, H, hd, hd] per-head state (f32)
+    shift_att: jnp.ndarray  # [B, D] previous token (time-mix)
+    shift_ffn: jnp.ndarray  # [B, D] previous token (channel-mix)
+
+
+def rwkv6_params(key, cfg) -> dict:
+    d, dff = cfg.d_model, cfg.d_ff
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 12)
+    mu = lambda k: jax.random.uniform(k, (d,), F32, 0.0, 1.0).astype(dt)
+    return {
+        "mu_r": mu(ks[0]), "mu_k": mu(ks[1]), "mu_v": mu(ks[2]),
+        "mu_w": mu(ks[3]), "mu_g": mu(ks[4]),
+        "wr": dense_init(ks[5], d, (d, d), dt),
+        "wk": dense_init(ks[6], d, (d, d), dt),
+        "wv": dense_init(ks[7], d, (d, d), dt),
+        "wg": dense_init(ks[8], d, (d, d), dt),
+        "wo": dense_init(ks[9], d, (d, d), dt),
+        "w0": jnp.full((d,), -0.6, F32),
+        "wA": dense_init(ks[10], d, (d, _LORA), dt),
+        "wB": dense_init(ks[11], _LORA, (_LORA, d), dt),
+        "u": jnp.zeros((H, hd), F32),
+        "ln_scale": jnp.ones((d,), F32),      # per-head group norm
+        # channel mix
+        "cm_mu_k": mu(ks[0]), "cm_mu_r": mu(ks[1]),
+        "cm_wk": dense_init(ks[2], d, (d, dff), dt),
+        "cm_wv": dense_init(ks[3], dff, (dff, d), dt),
+        "cm_wr": dense_init(ks[4], d, (d, d), dt),
+    }
+
+
+def rwkv6_pspecs() -> dict:
+    return {
+        "mu_r": LP(None), "mu_k": LP(None), "mu_v": LP(None),
+        "mu_w": LP(None), "mu_g": LP(None),
+        "wr": LP("embed_fsdp", "heads_flat"), "wk": LP("embed_fsdp", "heads_flat"),
+        "wv": LP("embed_fsdp", "heads_flat"), "wg": LP("embed_fsdp", "heads_flat"),
+        "wo": LP("heads_flat", "embed_fsdp"),
+        "w0": LP("heads_flat"), "wA": LP("embed_fsdp", None),
+        "wB": LP(None, "heads_flat"),
+        "u": LP("heads", None), "ln_scale": LP("heads_flat"),
+        "cm_mu_k": LP(None), "cm_mu_r": LP(None),
+        "cm_wk": LP("embed_fsdp", "ff"), "cm_wv": LP("ff", "embed_fsdp"),
+        "cm_wr": LP("embed_fsdp", "heads_flat"),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """xx[t] = x[t-1]; position 0 takes ``prev`` (decode carry) or zeros."""
+    first = (prev[:, None, :] if prev is not None
+             else jnp.zeros_like(x[:, :1]))
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _headnorm(y: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """GroupNorm with one group per head.  y: [B, S, H, hd]."""
+    yf = y.astype(F32)
+    mean = yf.mean(axis=-1, keepdims=True)
+    var = yf.var(axis=-1, keepdims=True)
+    n = (yf - mean) * jax.lax.rsqrt(var + eps)
+    B, S, H, hd = y.shape
+    return (n.reshape(B, S, H * hd) * scale).astype(y.dtype)
+
+
+def rwkv6_time_mix(p: dict, cfg, x: jnp.ndarray, *, chunk: int = 64,
+                   state: Optional[RWKVState] = None,
+                   return_state: bool = False):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    Lc = min(chunk, S)
+    assert S % Lc == 0
+    nc = S // Lc
+
+    xx = _shift(x, state.shift_att if state is not None else None)
+    mix = lambda mu: x + (xx - x) * mu[None, None, :].astype(x.dtype)
+    r = jnp.einsum("bsd,de->bse", mix(p["mu_r"]), p["wr"])
+    k = jnp.einsum("bsd,de->bse", mix(p["mu_k"]), p["wk"])
+    v = jnp.einsum("bsd,de->bse", mix(p["mu_v"]), p["wv"])
+    g = jnp.einsum("bsd,de->bse", mix(p["mu_g"]), p["wg"])
+    lora = jnp.einsum("bsl,ld->bsd",
+                      jnp.tanh(jnp.einsum("bsd,dl->bsl", mix(p["mu_w"]), p["wA"])),
+                      p["wB"])
+    logw = -jnp.exp(jnp.clip(p["w0"] + lora.astype(F32), -8.0, 2.0))  # <= 0
+
+    shp = (B, nc, Lc, H, hd)
+    r_c = r.reshape(shp).astype(F32)
+    k_c = k.reshape(shp).astype(F32)
+    v_c = v.reshape(shp).astype(F32)
+    lw = logw.reshape(shp)
+    cum = jnp.cumsum(lw, axis=2)                      # [B,nc,Lc,H,hd]
+
+    s0 = (state.wkv if state is not None
+          else jnp.zeros((B, H, hd, hd), F32))
+
+    def one_chunk(s_prev, inp):
+        rr, kk, vv, cc, ww = inp                      # [B,Lc,H,hd] each
+        # intra-chunk strict-lower scores (all decay factors <= 1)
+        dec = jnp.exp(cc[:, :, None] - ww[:, :, None] - cc[:, None, :])
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool), k=-1)
+        dec = jnp.where(tri[None, :, :, None, None], dec, 0.0)
+        scores = jnp.einsum("bthd,btshd,bshd->btsh", rr, dec, kk)
+        y = jnp.einsum("btsh,bshp->bthp", scores, vv)
+        # diagonal bonus term
+        y = y + jnp.einsum("bthd,hd,bthd,bthp->bthp", rr, p["u"], kk, vv)
+        # inter-chunk from carried state
+        rdec = rr * jnp.exp(cc - ww)
+        y = y + jnp.einsum("bthd,bhdp->bthp", rdec, s_prev)
+        # state update (all factors <= 1)
+        last = cc[:, -1:, :, :]
+        kdec = kk * jnp.exp(last - cc)
+        s_new = s_prev * jnp.exp(last[:, 0])[..., None] + \
+            jnp.einsum("bthd,bthp->bhdp", kdec, vv)
+        return s_new, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3, 4) for a in (r_c, k_c, v_c, cum, lw))
+    s_final, y = jax.lax.scan(one_chunk, s0, xs)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd).astype(x.dtype)
+
+    out = _headnorm(y, p["ln_scale"], cfg.norm_eps)
+    out = out * jax.nn.silu(g.astype(F32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    if return_state:
+        new_state = RWKVState(wkv=s_final, shift_att=x[:, -1, :],
+                              shift_ffn=jnp.zeros_like(x[:, -1, :]))
+        return out, new_state
+    return out
+
+
+def rwkv6_time_mix_decode(p: dict, cfg, x: jnp.ndarray, state: RWKVState):
+    """One-token decode.  x: [B, 1, D]; O(1) in context."""
+    B, _, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+
+    xx = state.shift_att[:, None, :]
+    mix = lambda mu: x + (xx - x) * mu[None, None, :].astype(x.dtype)
+    r = jnp.einsum("bsd,de->bse", mix(p["mu_r"]), p["wr"])[:, 0]
+    k = jnp.einsum("bsd,de->bse", mix(p["mu_k"]), p["wk"])[:, 0]
+    v = jnp.einsum("bsd,de->bse", mix(p["mu_v"]), p["wv"])[:, 0]
+    g = jnp.einsum("bsd,de->bse", mix(p["mu_g"]), p["wg"])[:, 0]
+    lora = jnp.einsum("bl,ld->bd",
+                      jnp.tanh(jnp.einsum("bsd,dl->bsl", mix(p["mu_w"]), p["wA"])[:, 0]),
+                      p["wB"])
+    logw = -jnp.exp(jnp.clip(p["w0"] + lora.astype(F32), -8.0, 2.0))
+
+    rh = r.reshape(B, H, hd).astype(F32)
+    kh = k.reshape(B, H, hd).astype(F32)
+    vh = v.reshape(B, H, hd).astype(F32)
+    w = jnp.exp(logw).reshape(B, H, hd)
+
+    kv = jnp.einsum("bhd,bhp->bhdp", kh, vh)
+    y = jnp.einsum("bhd,bhdp->bhp", rh * p["u"][None], kv) + \
+        jnp.einsum("bhd,bhdp->bhp", rh, state.wkv)
+    s_new = state.wkv * w[..., None] + kv
+
+    y = y.reshape(B, 1, H, hd).astype(x.dtype)
+    out = _headnorm(y, p["ln_scale"], cfg.norm_eps)
+    out = out * jax.nn.silu(g.astype(F32)).astype(x.dtype)[:, None, :]
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return out, state._replace(wkv=s_new, shift_att=x[:, 0, :])
+
+
+def rwkv6_channel_mix(p: dict, x: jnp.ndarray,
+                      prev: Optional[jnp.ndarray] = None,
+                      return_shift: bool = False):
+    xx = _shift(x, prev)
+    mix = lambda mu: x + (xx - x) * mu[None, None, :].astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", mix(p["cm_mu_k"]), p["cm_wk"])
+    k = jnp.square(jax.nn.relu(k.astype(F32))).astype(x.dtype)
+    k = constrain(k, "batch", "seq", "ff")
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cm_wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", mix(p["cm_mu_r"]),
+                                  p["cm_wr"]).astype(F32)).astype(x.dtype)
+    out = r * kv
+    if return_shift:
+        return out, x[:, -1, :]
+    return out
+
+
+def init_rwkv_state(cfg, B: int, dtype) -> RWKVState:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    return RWKVState(
+        wkv=jnp.zeros((B, H, hd, hd), F32),
+        shift_att=jnp.zeros((B, cfg.d_model), dtype),
+        shift_ffn=jnp.zeros((B, cfg.d_model), dtype))
+
+
+def rwkv_state_pspecs():
+    return RWKVState(wkv=LP("batch", "heads", None, None),
+                     shift_att=LP("batch", None),
+                     shift_ffn=LP("batch", None))

@@ -1,0 +1,101 @@
+"""Logical-axis sharding (MaxText-style) for the model zoo.
+
+Every tensor dimension is named with a *logical* axis; a rules table maps
+logical axes to mesh axes.  Hillclimbing a sharding (EXPERIMENTS.md §Perf)
+means editing one rules entry, not touching model code.
+
+Baseline rules (single-pod mesh ("data", "model"); the multi-pod mesh adds a
+leading "pod" axis folded into the batch/fsdp axes):
+
+  batch      -> (pod,) data      activations' batch dim (DP)
+  heads/ff/vocab/expert -> model tensor parallelism / expert parallelism
+  fsdp       -> data on *param* dims when cfg.fsdp (ZeRO-3: params+opt
+                sharded over the data axis, re-gathered per layer inside the
+                layer scan)
+  cache_seq  -> data              decode KV/state caches sharded over sequence
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes, or None)
+BASE_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # decode caches: sharded over data only in cells whose batch cannot use
+    # the data axis (long_500k, global_batch=1) — see launch/dryrun.py rules.
+    "cache_seq": None,
+    "embed": None,
+    "embed_fsdp": None,          # switched to ("pod", "data") under ZeRO/FSDP
+    "heads": "model",
+    "heads_flat": "model",       # flattened (H*hd) projections (rwkv)
+    "kv_heads": None,
+    "head_dim": None,
+    "group": None,
+    "ff": "model",
+    "vocab": "model",
+    "expert": "model",
+    "moe_ff": None,      # expert FF dim; decode shards it over data (EP^2)
+    "capacity": None,
+    "layers": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv_k": None,
+}
+
+_local = threading.local()
+
+
+def set_rules(overrides: Optional[dict] = None, *, mesh_axes: tuple = ("data", "model")):
+    """Install the active rules table, dropping mesh axes that do not exist
+    on the current mesh (e.g. "pod" on the single-pod mesh)."""
+    rules = dict(BASE_RULES)
+    if overrides:
+        rules.update(overrides)
+    resolved = {}
+    for k, v in rules.items():
+        if v is None:
+            resolved[k] = None
+        elif isinstance(v, tuple):
+            kept = tuple(a for a in v if a in mesh_axes)
+            resolved[k] = kept if kept else None
+        else:
+            resolved[k] = v if v in mesh_axes else None
+    _local.rules = resolved
+    return resolved
+
+
+def get_rules() -> dict:
+    if not hasattr(_local, "rules"):
+        set_rules()
+    return _local.rules
+
+
+def logical_pspec(*names: Optional[str]) -> P:
+    """PartitionSpec for a tensor whose dims carry these logical names.
+
+    A mesh axis may appear on at most one tensor dim; if two logical names
+    resolve to the same mesh axis, the first dim wins and later dims drop it.
+    """
+    rules = get_rules()
+    used: set = set()
+    out = []
+    for n in names:
+        v = rules.get(n) if n is not None else None
+        axes = v if isinstance(v, tuple) else (v,) if v is not None else ()
+        kept = tuple(a for a in axes if a not in used)
+        used.update(kept)
+        out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op outside a mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, logical_pspec(*names))
+    except Exception:
+        return x  # no mesh active (unit tests on a single device)

@@ -1,0 +1,200 @@
+"""Mamba2 (SSD) block — the zamba2 backbone layer.
+
+Chunked state-space-dual algorithm (Mamba-2 paper §6): within a chunk the
+output is an attention-like lower-triangular contraction with per-head
+scalar decay; across chunks a scan carries the [B, H, N, P] state.  All
+decay exponentials are differences of a within-chunk cumulative sum, so
+every factor is <= 1 (numerically safe in f32).
+
+Prefill returns the final (conv window, SSM state) so serving can hand off
+to the O(1)-per-token decode step — the property that lets zamba2/rwkv6 run
+the long_500k cell (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32, dense_init, dtype_of, rmsnorm, rmsnorm_params, rmsnorm_pspecs
+from .sharding import constrain, logical_pspec as LP
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray    # [B, k-1, conv_dim] rolling conv window
+    ssm: jnp.ndarray     # [B, H, N, P] recurrent state
+
+
+def mamba2_params(key, cfg) -> dict:
+    d, di, N, H, P = (cfg.d_model, cfg.ssm_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_head_dim)
+    k = cfg.ssm_conv
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], d, (d, di), dt),
+        "wx": dense_init(ks[1], d, (d, di), dt),
+        "wB": dense_init(ks[2], d, (d, N), dt),
+        "wC": dense_init(ks[3], d, (d, N), dt),
+        "wdt": dense_init(ks[4], d, (d, H), dt),
+        "conv_w": dense_init(ks[5], k, (k, di + 2 * N), dt),
+        "conv_b": jnp.zeros((di + 2 * N,), dt),
+        "A_log": jnp.zeros((H,), F32),
+        "D": jnp.ones((H,), F32),
+        "dt_bias": jnp.full((H,), -2.0, F32),   # softplus(-2) ~ 0.13
+        "norm": rmsnorm_params(di, dt),
+        "wo": dense_init(ks[6], di, (di, d), dt),
+    }
+
+
+def mamba2_pspecs(cfg) -> dict:
+    return {
+        "wz": LP("embed_fsdp", "ssm_inner"),
+        "wx": LP("embed_fsdp", "ssm_inner"),
+        "wB": LP("embed_fsdp", None),
+        "wC": LP("embed_fsdp", None),
+        "wdt": LP("embed_fsdp", "ssm_inner"),
+        "conv_w": LP(None, "ssm_inner"),
+        "conv_b": LP("ssm_inner"),
+        "A_log": LP("ssm_inner"),
+        "D": LP("ssm_inner"),
+        "dt_bias": LP("ssm_inner"),
+        "norm": rmsnorm_pspecs(),
+        "wo": LP("ssm_inner", "embed_fsdp"),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 window: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv.  u: [B, S, C]; w: [k, C]; window: [B, k-1, C]
+    (history; zeros for a fresh sequence)."""
+    k = w.shape[0]
+    if window is None:
+        window = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([window, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def mamba2_fwd(p: dict, cfg, x: jnp.ndarray, *, chunk: int = 128,
+               state: Optional[SSMState] = None,
+               return_state: bool = False):
+    """x: [B, S, D] -> [B, S, D] (and final SSMState if requested)."""
+    B, S, D = x.shape
+    di, N, H, P = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Lc = min(chunk, S)
+    assert S % Lc == 0
+    nc = S // Lc
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt_r = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+
+    u = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_win = state.conv if state is not None else None
+    u = jax.nn.silu(_causal_conv(u, p["conv_w"], p["conv_b"], conv_win
+                                 ).astype(F32)).astype(x.dtype)
+    new_conv = jnp.concatenate(
+        [conv_win if conv_win is not None else
+         jnp.zeros((B, cfg.ssm_conv - 1, di + 2 * N), x.dtype),
+         jnp.concatenate([xs, Bm, Cm], axis=-1)], axis=1)[:, -(cfg.ssm_conv - 1):]
+    xs, Bm, Cm = jnp.split(u, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_r.astype(F32) + p["dt_bias"])      # [B, S, H]
+    A = -jnp.exp(p["A_log"])                                    # [H], < 0
+    xs = constrain(xs.reshape(B, S, H, P), "batch", "seq", "ssm_inner", None)
+
+    # chunked SSD
+    xs_c = xs.reshape(B, nc, Lc, H, P).astype(F32)
+    B_c = Bm.reshape(B, nc, Lc, N).astype(F32)
+    C_c = Cm.reshape(B, nc, Lc, N).astype(F32)
+    dt_c = dt.reshape(B, nc, Lc, H)
+    dA = dt_c * A[None, None, None, :]                          # [B,nc,Lc,H]
+    cum = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk: Y[t] += sum_{s<=t} (C_t.B_s) exp(cum_t-cum_s) dt_s x_s
+    cb = jnp.einsum("bcln,bcsn->bcls", C_c, B_c)                # [B,nc,Lc,Lc]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)  # [B,nc,L,L,H]
+    scores = cb[..., None] * decay * dt_c[:, :, None, :, :]
+    y = jnp.einsum("bclsh,bcshp->bclhp", scores, xs_c)
+
+    # chunk summary states + inter-chunk scan
+    last = cum[:, :, -1:, :]                                    # [B,nc,1,H]
+    sdecay = jnp.exp(last - cum) * dt_c                         # [B,nc,Lc,H]
+    S_c = jnp.einsum("bcsh,bcsn,bcshp->bchnp", sdecay, B_c, xs_c)
+    chunk_decay = jnp.exp(last[:, :, 0, :])                     # [B,nc,H]
+
+    s0 = (state.ssm.astype(F32) if state is not None
+          else jnp.zeros((B, H, N, P), F32))
+
+    def chunk_scan(s_prev, inp):
+        dec, s_chunk = inp                                      # [B,H], [B,H,N,P]
+        s_new = s_prev * dec[:, :, None, None] + s_chunk
+        return s_new, s_prev
+
+    s_final, s_prevs = jax.lax.scan(
+        chunk_scan, s0,
+        (chunk_decay.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                  # [B,nc,H,N,P]
+
+    y_inter = jnp.einsum("bcln,bchnp,bclh->bclhp",
+                         C_c, s_prevs, jnp.exp(cum))
+    y = y + y_inter + (p["D"][None, None, None, :, None] * xs_c)
+    y = y.reshape(B, S, di).astype(x.dtype)
+
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"])
+    if return_state:
+        return out, SSMState(conv=new_conv, ssm=s_final.astype(F32))
+    return out
+
+
+def mamba2_decode(p: dict, cfg, x: jnp.ndarray, state: SSMState):
+    """One-token decode.  x: [B, 1, D]; O(1) in context length."""
+    B = x.shape[0]
+    di, N, H, P = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])[:, 0]
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"])[:, 0]
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"])[:, 0]
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"])[:, 0]
+    dt_r = jnp.einsum("bsd,dh->bsh", x, p["wdt"])[:, 0]
+
+    u_new = jnp.concatenate([xs, Bm, Cm], axis=-1)              # [B, conv_dim]
+    win = jnp.concatenate([state.conv, u_new[:, None, :]], axis=1)  # [B,k,C]
+    conv = (win * p["conv_w"][None]).sum(axis=1) + p["conv_b"]
+    u = jax.nn.silu(conv.astype(F32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(u, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_r.astype(F32) + p["dt_bias"])       # [B, H]
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt * A)                                       # [B, H]
+    xs_h = xs.reshape(B, H, P).astype(F32)
+    dBx = jnp.einsum("bh,bn,bhp->bhnp", dt, Bm.astype(F32), xs_h)
+    s_new = state.ssm * dec[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(F32), s_new)
+    y = y + p["D"][None, :, None] * xs_h
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["wo"])[:, None, :]
+    return out, SSMState(conv=win[:, 1:], ssm=s_new)
+
+
+def ssm_state_pspecs():
+    return SSMState(conv=LP("batch", None, "ssm_inner"),
+                    ssm=LP("batch", "ssm_inner", None, None))
+
+
+def init_ssm_state(cfg, B: int, dtype) -> SSMState:
+    di, N = cfg.ssm_inner, cfg.ssm_state
+    return SSMState(
+        conv=jnp.zeros((B, cfg.ssm_conv - 1, di + 2 * N), dtype),
+        ssm=jnp.zeros((B, cfg.ssm_heads, N, cfg.ssm_head_dim), F32))

@@ -1,0 +1,461 @@
+"""Model assembler: builds every assigned architecture family from the layer
+library, with scan-over-layers stacking (bounded HLO / compile time — a hard
+requirement at 512 fake devices on this container and good practice at
+1000-node scale), optional per-layer remat, and decode caches.
+
+Public surface:
+  init_params(cfg, key)          -> params pytree
+  param_pspecs(cfg)              -> same-structure PartitionSpec pytree
+  forward(params, cfg, batch)    -> (final hidden [B,S,D], aux dict)
+  init_cache(cfg, B, S)          -> cache pytree (+ cache_pspecs(cfg))
+  decode_step(params, cfg, cache, tokens, pos) -> (hidden [B,1,D], cache')
+
+``batch`` is a dict: tokens [B,S] int32 always; "img_embeds" [B,Nimg,D] for
+vlm; "enc_embeds" [B,S,D] for encdec (stub frontends per the assignment).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import rwkv as rk
+from . import ssm
+from .layers import (
+    F32,
+    attention_decode,
+    attention_fwd,
+    attention_params,
+    attention_pspecs,
+    dtype_of,
+    embed_lookup,
+    embed_params,
+    embed_pspecs,
+    mlp,
+    mlp_params,
+    mlp_pspecs,
+    rmsnorm,
+    rmsnorm_params,
+    rmsnorm_pspecs,
+)
+from .moe import moe_apply, moe_params, moe_pspecs
+from .sharding import constrain, logical_pspec as LP
+
+
+def _stack(fn, key, n: int):
+    """vmap an init over n layer keys -> stacked [n, ...] leaves."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _stack_pspecs(tree):
+    """Prepend the (unsharded) layer-stack dim to every PartitionSpec."""
+    return jax.tree.map(lambda p: P(None, *p),
+                        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# per-family layer parameter builders
+# ---------------------------------------------------------------------------
+
+
+def _decoder_layer_params(key, cfg, moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_params(cfg.d_model, dtype_of(cfg)),
+        "attn": attention_params(k1, cfg),
+        "ln2": rmsnorm_params(cfg.d_model, dtype_of(cfg)),
+    }
+    if moe:
+        p["moe"] = moe_params(k2, cfg)
+    else:
+        p["mlp"] = mlp_params(k2, cfg.d_model, cfg.d_ff, dtype_of(cfg))
+    return p
+
+
+def _decoder_layer_pspecs(cfg, moe: bool):
+    p = {"ln1": rmsnorm_pspecs(), "attn": attention_pspecs(),
+         "ln2": rmsnorm_pspecs()}
+    if moe:
+        p["moe"] = moe_pspecs(cfg)
+    else:
+        p["mlp"] = mlp_pspecs()
+    return p
+
+
+def _encdec_layer_params(key, cfg, cross: bool):
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": rmsnorm_params(cfg.d_model, dtype_of(cfg)),
+        "attn": attention_params(ks[0], cfg),
+        "ln3": rmsnorm_params(cfg.d_model, dtype_of(cfg)),
+        "mlp": mlp_params(ks[1], cfg.d_model, cfg.d_ff, dtype_of(cfg)),
+    }
+    if cross:
+        p["ln2"] = rmsnorm_params(cfg.d_model, dtype_of(cfg))
+        p["xattn"] = attention_params(ks[2], cfg)
+    return p
+
+
+def _encdec_layer_pspecs(cfg, cross: bool):
+    p = {"ln1": rmsnorm_pspecs(), "attn": attention_pspecs(),
+         "ln3": rmsnorm_pspecs(), "mlp": mlp_pspecs()}
+    if cross:
+        p["ln2"] = rmsnorm_pspecs()
+        p["xattn"] = attention_pspecs()
+    return p
+
+
+def _rwkv_layer_params(key, cfg):
+    return {"ln1": rmsnorm_params(cfg.d_model, dtype_of(cfg)),
+            "ln2": rmsnorm_params(cfg.d_model, dtype_of(cfg)),
+            "mix": rk.rwkv6_params(key, cfg)}
+
+
+def _hybrid_group_params(key, cfg):
+    """attn_every stacked mamba layers (one scan group)."""
+    def one(k):
+        return {"ln": rmsnorm_params(cfg.d_model, dtype_of(cfg)),
+                "mamba": ssm.mamba2_params(k, cfg)}
+    return _stack(one, key, cfg.attn_every)
+
+
+def init_params(cfg, key) -> dict:
+    ke, kl, ks_ = jax.random.split(key, 3)
+    params = {"embed": embed_params(ke, cfg),
+              "final_ln": rmsnorm_params(cfg.d_model, dtype_of(cfg))}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        params["layers"] = _stack(
+            lambda k: _decoder_layer_params(k, cfg, fam == "moe"),
+            kl, cfg.n_layers)
+    elif fam == "encdec":
+        k1, k2 = jax.random.split(kl)
+        params["enc_layers"] = _stack(
+            lambda k: _encdec_layer_params(k, cfg, cross=False),
+            k1, cfg.n_enc_layers)
+        params["dec_layers"] = _stack(
+            lambda k: _encdec_layer_params(k, cfg, cross=True),
+            k2, cfg.n_layers)
+        params["enc_ln"] = rmsnorm_params(cfg.d_model, dtype_of(cfg))
+    elif fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        params["groups"] = _stack(
+            lambda k: _hybrid_group_params(k, cfg), kl, n_groups)
+        kls = jax.random.split(ks_, 3)
+        params["shared"] = {
+            "ln1": rmsnorm_params(cfg.d_model, dtype_of(cfg)),
+            "attn": attention_params(kls[0], cfg),
+            "ln2": rmsnorm_params(cfg.d_model, dtype_of(cfg)),
+            "mlp": mlp_params(kls[1], cfg.d_model, cfg.d_ff, dtype_of(cfg)),
+        }
+    elif fam == "ssm":
+        params["layers"] = _stack(lambda k: _rwkv_layer_params(k, cfg),
+                                  kl, cfg.n_layers)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+def param_pspecs(cfg) -> dict:
+    specs = {"embed": embed_pspecs(cfg), "final_ln": rmsnorm_pspecs()}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        specs["layers"] = _stack_pspecs(_decoder_layer_pspecs(cfg, fam == "moe"))
+    elif fam == "encdec":
+        specs["enc_layers"] = _stack_pspecs(_encdec_layer_pspecs(cfg, False))
+        specs["dec_layers"] = _stack_pspecs(_encdec_layer_pspecs(cfg, True))
+        specs["enc_ln"] = rmsnorm_pspecs()
+    elif fam == "hybrid":
+        inner = {"ln": rmsnorm_pspecs(), "mamba": ssm.mamba2_pspecs(cfg)}
+        specs["groups"] = _stack_pspecs(_stack_pspecs(inner))
+        specs["shared"] = {"ln1": rmsnorm_pspecs(), "attn": attention_pspecs(),
+                           "ln2": rmsnorm_pspecs(), "mlp": mlp_pspecs()}
+    elif fam == "ssm":
+        specs["layers"] = _stack_pspecs(
+            {"ln1": rmsnorm_pspecs(), "ln2": rmsnorm_pspecs(),
+             "mix": rk.rwkv6_pspecs()})
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def forward(params: dict, cfg, batch: dict, *, dispatch_groups: int = 1,
+            collect_state: bool = False):
+    """Returns (hidden [B, S, D], aux).  aux holds MoE losses and (when
+    collect_state) the per-layer states serving needs for prefill->decode."""
+    fam = cfg.family
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed"], tokens)
+    B = x.shape[0]
+    aux = {"lb_loss": jnp.zeros((), F32), "z_loss": jnp.zeros((), F32)}
+
+    if fam == "vlm":
+        img = batch["img_embeds"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = constrain(x, "batch", "seq", None)
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(carry, lp):
+            h, lb, zl = carry
+            a = attention_fwd(lp["attn"], cfg, rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                              positions, causal=True)
+            h = h + a
+            hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+            if fam == "moe":
+                f, mx = moe_apply(lp["moe"], cfg, hn, dispatch_groups)
+                lb, zl = lb + mx["lb_loss"], zl + mx["z_loss"]
+            else:
+                f = mlp(lp["mlp"], hn)
+            return (h + f, lb, zl), None
+
+        (x, lb, zl), _ = jax.lax.scan(_maybe_remat(body, cfg),
+                                      (x, aux["lb_loss"], aux["z_loss"]),
+                                      params["layers"])
+        aux = {"lb_loss": lb / cfg.n_layers, "z_loss": zl / cfg.n_layers}
+
+    elif fam == "encdec":
+        enc = batch["enc_embeds"].astype(x.dtype)
+        Se = enc.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+
+        def enc_body(h, lp):
+            a = attention_fwd(lp["attn"], cfg, rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                              enc_pos, causal=False)
+            h = h + a
+            h = h + mlp(lp["mlp"], rmsnorm(lp["ln3"], h, cfg.norm_eps))
+            return h, None
+
+        enc, _ = jax.lax.scan(_maybe_remat(enc_body, cfg), enc,
+                              params["enc_layers"])
+        enc = rmsnorm(params["enc_ln"], enc, cfg.norm_eps)
+
+        def dec_body(h, lp):
+            a = attention_fwd(lp["attn"], cfg, rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                              positions, causal=True)
+            h = h + a
+            c = attention_fwd(lp["xattn"], cfg, rmsnorm(lp["ln2"], h, cfg.norm_eps),
+                              positions, causal=False,
+                              kv_override=(enc, enc_pos))
+            h = h + c
+            h = h + mlp(lp["mlp"], rmsnorm(lp["ln3"], h, cfg.norm_eps))
+            return h, None
+
+        x, _ = jax.lax.scan(_maybe_remat(dec_body, cfg), x,
+                            params["dec_layers"])
+
+    elif fam == "hybrid":
+        sp = params["shared"]
+
+        def group_body(h, gp):
+            def mamba_body(hh, lp):
+                out = ssm.mamba2_fwd(lp["mamba"],
+                                     cfg, rmsnorm(lp["ln"], hh, cfg.norm_eps))
+                return hh + out, None
+            h, _ = jax.lax.scan(mamba_body, h, gp)
+            a = attention_fwd(sp["attn"], cfg,
+                              rmsnorm(sp["ln1"], h, cfg.norm_eps),
+                              positions, causal=True)
+            h = h + a
+            h = h + mlp(sp["mlp"], rmsnorm(sp["ln2"], h, cfg.norm_eps))
+            return h, None
+
+        x, _ = jax.lax.scan(_maybe_remat(group_body, cfg), x, params["groups"])
+
+    elif fam == "ssm":
+        def body(h, lp):
+            t = rk.rwkv6_time_mix(lp["mix"], cfg,
+                                  rmsnorm(lp["ln1"], h, cfg.norm_eps))
+            h = h + t
+            c = rk.rwkv6_channel_mix(lp["mix"],
+                                     rmsnorm(lp["ln2"], h, cfg.norm_eps))
+            return h + c, None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+
+    x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode caches + one-token decode step
+# ---------------------------------------------------------------------------
+
+
+class Cache(NamedTuple):
+    """Family-polymorphic decode cache; unused fields are empty arrays."""
+    k: jnp.ndarray            # attn KV: [L, B, S, Kv, hd]
+    v: jnp.ndarray
+    xk: jnp.ndarray           # encdec cross-attn K/V: [L, B, Se, Kv, hd]
+    xv: jnp.ndarray
+    ssm_conv: jnp.ndarray     # [L_or_groups..., B, k-1, conv_dim]
+    ssm: jnp.ndarray          # [L..., B, H, N, P]
+    wkv: jnp.ndarray          # [L, B, H, hd, hd]
+    shift_att: jnp.ndarray    # [L, B, D]
+    shift_ffn: jnp.ndarray    # [L, B, D]
+
+
+def _empty():
+    return jnp.zeros((0,), jnp.float32)
+
+
+def init_cache(cfg, B: int, S: int) -> Cache:
+    dt = dtype_of(cfg)
+    hd = cfg.resolved_head_dim
+    kv = cfg.padded_kv_heads
+    e = _empty()
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        shp = (cfg.n_layers, B, S, kv, hd)
+        return Cache(jnp.zeros(shp, dt), jnp.zeros(shp, dt), e, e, e, e, e, e, e)
+    if fam == "encdec":
+        shp = (cfg.n_layers, B, S, kv, hd)
+        xshp = (cfg.n_layers, B, S, kv, hd)   # enc length == S cell-wise
+        return Cache(jnp.zeros(shp, dt), jnp.zeros(shp, dt),
+                     jnp.zeros(xshp, dt), jnp.zeros(xshp, dt), e, e, e, e, e)
+    if fam == "hybrid":
+        ng = cfg.n_layers // cfg.attn_every
+        st = ssm.init_ssm_state(cfg, B, dt)
+        conv = jnp.broadcast_to(st.conv, (ng, cfg.attn_every) + st.conv.shape)
+        ssm_s = jnp.broadcast_to(st.ssm, (ng, cfg.attn_every) + st.ssm.shape)
+        shp = (ng, B, S, kv, hd)
+        return Cache(jnp.zeros(shp, dt), jnp.zeros(shp, dt), e, e,
+                     conv, ssm_s, e, e, e)
+    if fam == "ssm":
+        st = rk.init_rwkv_state(cfg, B, dt)
+        L = cfg.n_layers
+        return Cache(e, e, e, e, e, e,
+                     jnp.broadcast_to(st.wkv, (L,) + st.wkv.shape),
+                     jnp.broadcast_to(st.shift_att, (L,) + st.shift_att.shape),
+                     jnp.broadcast_to(st.shift_ffn, (L,) + st.shift_ffn.shape))
+    raise ValueError(fam)
+
+
+def cache_pspecs(cfg) -> Cache:
+    e = P(None)
+    kvp = P(None, *LP("batch", "cache_seq", "kv_heads", None))
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return Cache(kvp, kvp, e, e, e, e, e, e, e)
+    if fam == "encdec":
+        return Cache(kvp, kvp, kvp, kvp, e, e, e, e, e)
+    if fam == "hybrid":
+        sp = ssm.ssm_state_pspecs()
+        conv = P(None, None, *sp.conv)
+        ssm_p = P(None, None, *sp.ssm)
+        return Cache(kvp, kvp, e, e, conv, ssm_p, e, e, e)
+    if fam == "ssm":
+        rp = rk.rwkv_state_pspecs()
+        return Cache(e, e, e, e, e, e,
+                     P(None, *rp.wkv), P(None, *rp.shift_att),
+                     P(None, *rp.shift_ffn))
+    raise ValueError(fam)
+
+
+def decode_step(params: dict, cfg, cache: Cache, tokens: jnp.ndarray,
+                pos: jnp.ndarray, dispatch_groups: int = 1):
+    """One new token against a populated cache.
+
+    tokens: [B, 1] int32; pos: [B] int32 (index of the new token).
+    Returns (hidden [B, 1, D], cache').
+    """
+    fam = cfg.family
+    x = embed_lookup(params["embed"], tokens)
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(h, lpc):
+            lp, ck, cv = lpc
+            a, ck, cv = attention_decode(
+                lp["attn"], cfg, rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                ck, cv, pos)
+            h = h + a
+            hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+            if fam == "moe":
+                f, _ = moe_apply(lp["moe"], cfg, hn, dispatch_groups)
+            else:
+                f = mlp(lp["mlp"], hn)
+            return h + f, (ck, cv)
+
+        x, (k_new, v_new) = jax.lax.scan(body, x,
+                                         (params["layers"], cache.k, cache.v))
+        cache = cache._replace(k=k_new, v=v_new)
+
+    elif fam == "encdec":
+        def body(h, lpc):
+            lp, ck, cv, xk, xv = lpc
+            a, ck, cv = attention_decode(
+                lp["attn"], cfg, rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                ck, cv, pos)
+            h = h + a
+            # cross-attn: read-only over the encoder cache
+            xpos = jnp.full_like(pos, xk.shape[1] - 1)
+            c, _, _ = attention_decode(
+                lp["xattn"], cfg, rmsnorm(lp["ln2"], h, cfg.norm_eps),
+                xk, xv, xpos, use_rope=False, append=False)
+            h = h + c
+            h = h + mlp(lp["mlp"], rmsnorm(lp["ln3"], h, cfg.norm_eps))
+            return h, (ck, cv)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache.k, cache.v,
+                      cache.xk, cache.xv))
+        cache = cache._replace(k=k_new, v=v_new)
+
+    elif fam == "hybrid":
+        sp = params["shared"]
+
+        def group_body(h, gpc):
+            gp, conv, st, ck, cv = gpc
+
+            def mamba_body(hh, lps):
+                lp, cv_, st_ = lps
+                out, ns = ssm.mamba2_decode(
+                    lp["mamba"], cfg, rmsnorm(lp["ln"], hh, cfg.norm_eps),
+                    ssm.SSMState(cv_, st_))
+                return hh + out, (ns.conv, ns.ssm)
+
+            h, (conv, st) = jax.lax.scan(mamba_body, h, (gp, conv, st))
+            a, ck, cv = attention_decode(
+                sp["attn"], cfg, rmsnorm(sp["ln1"], h, cfg.norm_eps),
+                ck, cv, pos)
+            h = h + a
+            h = h + mlp(sp["mlp"], rmsnorm(sp["ln2"], h, cfg.norm_eps))
+            return h, (conv, st, ck, cv)
+
+        x, (conv, st, k_new, v_new) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], cache.ssm_conv, cache.ssm, cache.k, cache.v))
+        cache = cache._replace(ssm_conv=conv, ssm=st, k=k_new, v=v_new)
+
+    elif fam == "ssm":
+        def body(h, lpc):
+            lp, wkv, sa, sf = lpc
+            st = rk.RWKVState(wkv, sa, sf)
+            t, st = rk.rwkv6_time_mix_decode(
+                lp["mix"], cfg, rmsnorm(lp["ln1"], h, cfg.norm_eps), st)
+            h = h + t
+            hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+            c, sf = rk.rwkv6_channel_mix(lp["mix"], hn, prev=st.shift_ffn,
+                                         return_shift=True)
+            return h + c, (st.wkv, st.shift_att, sf)
+
+        x, (wkv, sa, sf) = jax.lax.scan(
+            body, x, (params["layers"], cache.wkv, cache.shift_att,
+                      cache.shift_ffn))
+        cache = cache._replace(wkv=wkv, shift_att=sa, shift_ffn=sf)
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    return x, cache

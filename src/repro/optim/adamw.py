@@ -1,0 +1,199 @@
+"""First-party AdamW (no optax in this container) with quantized moments.
+
+moment_dtype:
+  "float32" — standard AdamW.
+  "bfloat16" — bf16 moments (2x smaller optimizer state).
+  "int8"    — block-quantized int8 moments with per-block f32 scales
+              (block = last axis, 128 wide): ~4x smaller state.  This is
+              what lets kimi-k2-1t's optimizer state fit the multi-pod mesh
+              (EXPERIMENTS.md §Dry-run memory table).
+
+The optimizer state mirrors the param tree leaf-for-leaf, so the same
+PartitionSpecs shard it (ZeRO when cfg.fsdp routes embed_fsdp -> data).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+_BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+
+@dataclasses.dataclass
+class QTensor:
+    """Block-quantized int8 tensor, blocked along the LAST axis so the
+    quantized layout is a pure reshape of the parameter layout — q inherits
+    the parameter's sharding leaf-for-leaf (a flattened [n_blocks, 128]
+    layout forced GSPMD to all-gather TB-scale f32 moments inside the
+    optimizer update; measured on kimi-k2 — EXPERIMENTS.md §Perf).
+
+    Linear mode (signed, first moment): x ~ q * scale.
+    Log mode (positive, second moment): x ~ exp(offset + (q+127) * scale) —
+    log-space keeps *relative* precision; linear int8 floors small v to 0
+    and 1/sqrt(v) explodes (confirmed by divergence in early testing).
+
+    q: int8 [..., n_blk, 128]; scale/offset: f32 [..., n_blk, 1].
+    Registered as a pytree with ``log`` static (aux data)."""
+    q: jnp.ndarray
+    scale: jnp.ndarray
+    offset: jnp.ndarray
+    log: bool = False
+
+
+jax.tree_util.register_pytree_node(
+    QTensor,
+    lambda t: ((t.q, t.scale, t.offset), t.log),
+    lambda log, ch: QTensor(q=ch[0], scale=ch[1], offset=ch[2], log=log),
+)
+
+
+def _quantize(x: jnp.ndarray, log: bool) -> QTensor:
+    last = x.shape[-1] if x.ndim else 1
+    xr = x.reshape(x.shape if x.ndim else (1,))
+    pad = (-last) % _BLOCK
+    if pad:
+        xr = jnp.pad(xr, [(0, 0)] * (xr.ndim - 1) + [(0, pad)],
+                     constant_values=1e-30 if log else 0.0)
+    blocks = xr.reshape(*xr.shape[:-1], -1, _BLOCK)
+    if log:
+        lb = jnp.log(jnp.maximum(blocks, 1e-30))
+        lo = lb.min(axis=-1, keepdims=True)
+        s = (lb.max(axis=-1, keepdims=True) - lo) / 254.0
+        q = jnp.round((lb - lo) / jnp.maximum(s, 1e-12)) - 127.0
+        return QTensor(q=q.astype(jnp.int8), scale=s.astype(F32),
+                       offset=lo.astype(F32), log=True)
+    s = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(s, 1e-20)).astype(jnp.int8)
+    return QTensor(q=q, scale=s.astype(F32),
+                   offset=jnp.zeros_like(s, F32), log=False)
+
+
+def _dequantize(t: QTensor, shape, size) -> jnp.ndarray:
+    if t.log:
+        x = jnp.exp(t.offset + (t.q.astype(F32) + 127.0) * t.scale)
+        x = jnp.where(x <= 2e-30, 0.0, x)
+    else:
+        x = t.q.astype(F32) * t.scale
+    x = x.reshape(*x.shape[:-2], -1)           # unblock the last axis
+    last = shape[-1] if shape else 1
+    if x.shape[-1] != last:
+        x = x[..., :last]
+    return x.reshape(shape)
+
+
+def _encode(x: jnp.ndarray, dtype: str, log: bool = False):
+    if dtype == "int8":
+        return _quantize(x, log)
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    return x.astype(F32)
+
+
+def _decode(x, like: jnp.ndarray, dtype: str) -> jnp.ndarray:
+    if dtype == "int8":
+        return _dequantize(x, like.shape, like.size)
+    return x.astype(F32)
+
+
+def cosine_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(F32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> OptState:
+    m = jax.tree.map(lambda p: _encode(jnp.zeros(p.shape, F32),
+                                       cfg.moment_dtype, log=False), params)
+    v = jax.tree.map(lambda p: _encode(jnp.zeros(p.shape, F32),
+                                       cfg.moment_dtype, log=True), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_update(params, grads, state: OptState, cfg: AdamWConfig):
+    """Returns (params', state', metrics)."""
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1 - cfg.b1 ** step.astype(F32)
+    b2c = 1 - cfg.b2 ** step.astype(F32)
+
+    is_q = lambda x: isinstance(x, QTensor)
+
+    def upd(p, g, m_enc, v_enc):
+        g = g.astype(F32) * scale
+        m = cfg.b1 * _decode(m_enc, p, cfg.moment_dtype) + (1 - cfg.b1) * g
+        v = cfg.b2 * _decode(v_enc, p, cfg.moment_dtype) + (1 - cfg.b2) * g * g
+        upd_ = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        decay = jnp.where(p.ndim >= 2, cfg.weight_decay, 0.0)  # no WD on norms
+        newp = p.astype(F32) - lr * (upd_ + decay * p.astype(F32))
+        return (newp.astype(p.dtype), _encode(m, cfg.moment_dtype, log=False),
+                _encode(v, cfg.moment_dtype, log=True))
+
+    # flatten by the params treedef; moments keep QTensor nodes as leaves
+    p_flat, treedef = jax.tree.flatten(params)
+    g_flat = jax.tree.leaves(grads)
+    m_flat = jax.tree.flatten(state.m, is_leaf=is_q)[0]
+    v_flat = jax.tree.flatten(state.v, is_leaf=is_q)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(p_flat, g_flat, m_flat, v_flat)]
+    newp = treedef.unflatten([t[0] for t in out])
+    newm = treedef.unflatten([t[1] for t in out])
+    newv = treedef.unflatten([t[2] for t in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return newp, OptState(step=step, m=newm, v=newv), metrics
+
+
+def opt_pspecs(param_specs, cfg: AdamWConfig):
+    """Optimizer-state PartitionSpecs mirroring the param specs.  int8
+    moments are last-axis-blocked reshapes of the parameter, so each q/scale
+    leaf keeps the parameter's spec (block dim inherits the old last-dim
+    axis; the 128-wide tail and the scale's 1-wide tail are unsharded)."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec_for(ps, log):
+        if cfg.moment_dtype != "int8":
+            return ps
+        front = tuple(ps)[:-1] if len(ps) else ()
+        last = tuple(ps)[-1] if len(ps) else None
+        blocked = P(*front, last, None)
+        return QTensor(q=blocked, scale=blocked, offset=blocked, log=log)
+
+    is_p = lambda x: isinstance(x, P)
+    mspec = jax.tree.map(lambda ps: spec_for(ps, False), param_specs,
+                         is_leaf=is_p)
+    vspec = jax.tree.map(lambda ps: spec_for(ps, True), param_specs,
+                         is_leaf=is_p)
+    return OptState(step=P(), m=mspec, v=vspec)

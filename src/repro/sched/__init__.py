@@ -1,0 +1,3 @@
+from .locality import FleetTopology, service_rates
+from .router import PodRouter, RouterStats
+from .straggler import ShardBalancer

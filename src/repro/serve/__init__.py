@@ -1,0 +1,1 @@
+from .engine import EngineStats, Request, ServeEngine

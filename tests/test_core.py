@@ -1,0 +1,127 @@
+"""Core scheduler tests: paper-model invariants, oracle agreement, claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALGORITHMS,
+    Cluster,
+    PodSpec,
+    Rates,
+    SimConfig,
+    capacity_arrival_rate,
+    locality_class,
+    sample_locals,
+    simulate,
+)
+from repro.core.refsim import simulate_bp_ref
+
+CLUSTER = Cluster(M=40, K=4)
+RATES = Rates(0.05, 0.025, 0.01)
+QUICK = SimConfig(T=6_000, warmup=1_500)
+
+
+def _run(algo, load, seed=0, cfg=QUICK, cluster=CLUSTER, **kw):
+    return simulate(algo, cluster, RATES, load, jax.random.PRNGKey(seed),
+                    cfg, **kw)
+
+
+def test_all_algorithms_run_and_are_stable_at_moderate_load():
+    for algo in ALGORITHMS:
+        r = _run(algo, 0.5)
+        assert np.isfinite(float(r.mean_completion_slots)), algo
+        if algo != "fcfs":   # fcfs loses capacity to remote service
+            assert float(r.drift) < 1.6, (algo, float(r.drift))
+            # throughput tracks arrivals when stable
+            assert abs(float(r.throughput) / float(r.arrival_rate_hat) - 1) \
+                < 0.1, algo
+
+
+def test_littles_law_matches_event_accurate_reference():
+    """The vectorized simulator's Little's-law completion time agrees with
+    the numpy per-task sojourn oracle."""
+    ref = simulate_bp_ref(CLUSTER, RATES, 0.7, T=10_000, warmup=2_500, seed=0)
+    vals = [float(_run("balanced_pandas", 0.7, seed=s,
+                       cfg=SimConfig(T=10_000, warmup=2_500)
+                       ).mean_completion_slots) for s in range(3)]
+    est = np.mean(vals)
+    assert abs(est - ref.mean_completion_slots) / ref.mean_completion_slots \
+        < 0.15, (est, ref.mean_completion_slots)
+
+
+def test_balanced_pandas_enhances_locality_vs_jsq_family():
+    """Paper §V discussion: BP(-Pod) serves a (much) larger local fraction."""
+    bp = _run("balanced_pandas", 0.6)
+    pod = _run("balanced_pandas_pod", 0.6)
+    fcfs = _run("fcfs", 0.3)
+    assert float(bp.locality_fractions[0]) > 0.7
+    assert float(pod.locality_fractions[0]) > 0.7
+    assert float(fcfs.locality_fractions[0]) < 0.3
+
+
+def test_pod_complexity_counters():
+    """Paper §IV-C: BP-Pod probes (3+d) workloads per routing decision vs M;
+    for M=500, d=8 that is 2.2%."""
+    r_full = _run("balanced_pandas", 0.4)
+    r_pod = _run("balanced_pandas_pod", 0.4)
+    assert float(r_full.route_candidates_per_decision) == CLUSTER.M
+    assert float(r_pod.route_candidates_per_decision) == 3 + 8
+    big = Cluster(M=500, K=10)
+    frac = (3 + 8) / big.M
+    assert abs(frac - 0.022) < 1e-3
+
+
+def test_bp_pod_with_full_candidate_set_equals_bp_distribution():
+    """d -> everything makes Pod behave like full BP (same load level)."""
+    cfg = SimConfig(T=8_000, warmup=2_000)
+    full_pod = PodSpec(d_rack=CLUSTER.M, d_remote=CLUSTER.M)
+    a = np.mean([float(_run("balanced_pandas", 0.75, seed=s, cfg=cfg)
+                       .mean_completion_slots) for s in range(3)])
+    b = np.mean([float(_run("balanced_pandas_pod", 0.75, seed=s, cfg=cfg,
+                            pod=full_pod).mean_completion_slots)
+                 for s in range(3)])
+    assert abs(a - b) / a < 0.15, (a, b)
+
+
+def test_batched_and_sequential_routing_agree():
+    cfg_b = SimConfig(T=8_000, warmup=2_000, route_mode="batched")
+    cfg_s = SimConfig(T=8_000, warmup=2_000, route_mode="sequential")
+    for algo in ("balanced_pandas_pod", "jsq_maxweight"):
+        a = float(_run(algo, 0.7, cfg=cfg_s).mean_completion_slots)
+        b = float(_run(algo, 0.7, cfg=cfg_b).mean_completion_slots)
+        assert abs(a - b) / a < 0.25, (algo, a, b)
+
+
+def test_capacity_region_scaling():
+    lam = capacity_arrival_rate(CLUSTER, RATES, 0.5)
+    assert lam == pytest.approx(0.5 * CLUSTER.M * RATES.alpha)
+
+
+def test_locality_class_partition():
+    key = jax.random.PRNGKey(0)
+    locals_ = sample_locals(key, CLUSTER, 64)
+    cls = locality_class(CLUSTER, locals_)
+    # each task: exactly 3 local servers, rack-locals within local racks
+    assert (jnp.sum(cls == 0, axis=1) == 3).all()
+    R = CLUSTER.rack_size
+    n_rack = jnp.sum(cls == 1, axis=1)
+    assert (n_rack <= 3 * (R - 1)).all() and (n_rack >= R - 3).all()
+    assert ((cls >= 0) & (cls <= 2)).all()
+
+
+def test_sample_locals_distinct_and_uniform():
+    key = jax.random.PRNGKey(1)
+    loc = np.asarray(sample_locals(key, CLUSTER, 4000))
+    assert all(len(set(row)) == 3 for row in loc)
+    counts = np.bincount(loc.reshape(-1), minlength=CLUSTER.M)
+    expect = loc.size / CLUSTER.M
+    assert counts.min() > 0.6 * expect and counts.max() < 1.4 * expect
+
+
+def test_geometric_and_lognormal_service():
+    for dist in ("geometric", "lognormal"):
+        cfg = SimConfig(T=6_000, warmup=1_500, service_dist=dist)
+        r = _run("balanced_pandas_pod", 0.5, cfg=cfg)
+        assert np.isfinite(float(r.mean_completion_slots))
+        assert float(r.drift) < 1.6

@@ -1,0 +1,88 @@
+"""Scheduler integration: PodRouter (kernel-backed), straggler balancer,
+balls-and-bins asymptotics, serve engine end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ballsbins import max_load, theory_d
+from repro.sched import FleetTopology, PodRouter, ShardBalancer, service_rates
+
+
+def test_router_prefers_low_workload_locals():
+    fleet = FleetTopology(n_replicas=32, n_pods=4)
+    router = PodRouter(fleet, service_rates(), policy="pod")
+    homes = np.array([[0, 1, 2]] * 16)
+    sel = router.route(homes)
+    # empty cluster: everything lands on the (local) home replicas
+    assert set(sel.tolist()) <= {0, 1, 2}
+    # now flood the homes and route again: spillover must be sampled
+    for _ in range(20):
+        router.route(homes)
+    sel2 = router.route(homes)
+    assert router.stats.decisions == 16 * 22
+    assert router.stats.probes == 16 * 22 * (3 + 8)   # O(1): 11 probes
+
+
+def test_router_full_policy_probes_M():
+    fleet = FleetTopology(n_replicas=32, n_pods=4)
+    router = PodRouter(fleet, service_rates(), policy="full")
+    homes = np.array([[0, 1, 2]] * 8)
+    router.route(homes)
+    assert router.stats.probes == 8 * 32                # O(M)
+
+
+def test_straggler_rebalancing():
+    bal = ShardBalancer(n_workers=16, n_pods=4, seed=0)
+    # worker 3 becomes a straggler (4x slow)
+    for _ in range(10):
+        bal.observe(3, step_time=4.0, expected=1.0)
+        for w in range(16):
+            if w != 3:
+                bal.observe(w, step_time=1.0, expected=1.0)
+    rng = np.random.default_rng(0)
+    picks = []
+    for _ in range(200):
+        homes = rng.choice(16, size=3, replace=False)
+        picks.append(bal.assign(homes))
+        bal.drain(0.3)
+    counts = np.bincount(picks, minlength=16)
+    healthy = np.delete(counts, 3)
+    # the straggler receives far fewer shards than the mean healthy worker
+    assert counts[3] < 0.5 * healthy.mean(), counts
+
+
+def test_balls_and_bins_power_of_two():
+    """Paper §I: max load drops from ~log n/log log n (d=1) to
+    ~log log n/log d (d=2)."""
+    n = 512
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    d1 = np.mean([int(max_load(k, n, 1)) for k in keys])
+    d2 = np.mean([int(max_load(k, n, 2)) for k in keys])
+    assert d2 < d1 - 1, (d1, d2)
+    assert d2 <= theory_d(n, 2) + 3.0
+
+
+def test_serve_engine_end_to_end():
+    from repro.configs import get
+    from repro.models import init_params
+    from repro.serve import Request, ServeEngine
+
+    cfg = get("llama3_8b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fleet = FleetTopology(n_replicas=8, n_pods=2)
+    router = PodRouter(fleet, service_rates(), policy="pod")
+    rng = np.random.default_rng(0)
+    prefix_homes = {i: rng.choice(8, size=3, replace=False)
+                    for i in range(4)}
+    eng = ServeEngine(cfg, params, fleet, router, prefix_homes, max_batch=4)
+    reqs = [Request(rid=i, prefix_id=i % 4,
+                    prompt=rng.integers(0, cfg.vocab, size=3),
+                    max_new=4, arrival=0) for i in range(12)]
+    eng.submit(reqs)
+    stats = eng.run(until_done=12, max_ticks=500)
+    assert len(stats.completions) == 12
+    assert all(c > 0 for c in stats.completions)
+    assert stats.probes_per_decision == 11          # 3 locals + d=8
+    for r in eng.done:
+        assert len(r.generated) == 4
+        assert all(0 <= t < cfg.padded_vocab for t in r.generated)
