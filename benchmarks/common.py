@@ -43,6 +43,18 @@ class Preset:
     n_seeds: int
 
 
+# CI-sized: small fleet, short runs — exercises every code path in seconds.
+SMOKE = Preset(
+    name="smoke",
+    cluster=Cluster(M=40, K=4),
+    rates=Rates(0.05, 0.025, 0.01),
+    cfg=SimConfig(T=3_000, warmup=800, route_mode="batched"),
+    loads=(0.5, 0.8),
+    high_loads=(0.8,),
+    fixed_load=0.8,
+    n_seeds=1,
+)
+
 QUICK = Preset(
     name="quick",
     cluster=Cluster(M=100, K=10),
@@ -69,8 +81,11 @@ PAPER = Preset(
 
 
 def preset_from_argv() -> Preset:
-    return PAPER if "--preset=paper" in sys.argv or "paper" in sys.argv[1:] \
-        else QUICK
+    if "--preset=paper" in sys.argv or "paper" in sys.argv[1:]:
+        return PAPER
+    if "--preset=smoke" in sys.argv or "smoke" in sys.argv[1:]:
+        return SMOKE
+    return QUICK
 
 
 def run_figure(preset: Preset, loads, service_dist: str, name: str,

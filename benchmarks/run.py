@@ -1,8 +1,9 @@
 """Benchmark orchestrator — one harness per paper figure/table + the
-framework's complexity/roofline reports.  Prints a ``name,seconds,headline``
-CSV summary at the end.
+framework's complexity/roofline reports + the scenario sweep.  Prints a
+``name,seconds,headline`` CSV summary at the end.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--preset=paper]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--preset=paper|smoke]
+                                                [--only=suite1,suite2]
 """
 import os
 import sys
@@ -20,6 +21,7 @@ import fig6_highload_logn
 import fig7_fixedload_logn
 import locality
 import roofline_table
+import scenarios as scenarios_suite
 from common import preset_from_argv
 
 
@@ -41,6 +43,18 @@ def _headline(name, out):
             done = [r for r in out if isinstance(r, dict)
                     and "skipped" not in r]
             return f"{len(done)} cells"
+        if name == "scenarios":
+            import numpy as np
+            rows = out["scenarios"]
+            gaps = {n: (r["algos"]["balanced_pandas_pod"]["mean"]
+                        - r["algos"]["balanced_pandas"]["mean"])
+                    / max(r["algos"]["balanced_pandas"]["mean"], 1e-9)
+                    for n, r in rows.items()}
+            worst = max(rows, key=lambda n: rows[n]["sensitivity_d"])
+            return (f"{len(rows)} scenarios; BP-Pod vs BP gap "
+                    f"{np.mean(list(gaps.values())):+.1%} mean; "
+                    f"d-sensitivity peaks at {worst} "
+                    f"({rows[worst]['sensitivity_d']:+.1%})")
     except Exception:
         pass
     return ""
@@ -58,10 +72,19 @@ def main() -> None:
         ("fig6_highload_logn", fig6_highload_logn.main),
         ("fig7_fixedload_logn", fig7_fixedload_logn.main),
         ("locality", locality.main),
+        ("scenarios", scenarios_suite.main),
         ("complexity", complexity.main),
         ("balls_and_bins", balls_and_bins.main),
         ("roofline", roofline_table.main),
     ]
+    only = [a.split("=", 1)[1] for a in sys.argv[1:]
+            if a.startswith("--only=")]
+    if only:
+        wanted = {n for o in only for n in o.split(",") if n}
+        unknown = wanted - {n for n, _ in suites}
+        if unknown:
+            raise SystemExit(f"--only: unknown suites {sorted(unknown)}")
+        suites = [(n, fn) for n, fn in suites if n in wanted]
     summary = []
     for name, fn in suites:
         t0 = time.time()

@@ -1,0 +1,102 @@
+"""Scenario sweep — the paper's algorithms under the scenario registry.
+
+For every registered scenario (heterogeneous fleets, bursty / diurnal /
+flash traffic, Zipf placement — repro.scenarios) this suite runs
+Balanced-Pandas, Balanced-Pandas-Pod and JSQ-MaxWeight-Pod at the preset's
+fixed load and reports mean task completion time, plus BP-Pod's
+*sensitivity to d*: the paper's claim is that d barely matters (d=8 probes
+recover the O(M) policy); scenarios show where that stops being true.
+
+sensitivity_d = (mean_T[d=3] - mean_T[d=16]) / mean_T[d=16]
+  ~0   -> the scenario is insensitive to the probe budget (paper regime)
+  >>0  -> small candidate sets hurt; locality/heterogeneity makes extra
+         probes valuable.
+"""
+import time
+
+import numpy as np
+
+from common import Preset, preset_from_argv, save_artifact
+
+from repro.core import PodSpec, simulate_grid
+from repro.scenarios import SCENARIOS
+
+ALGOS = ("balanced_pandas", "balanced_pandas_pod", "jsq_maxweight_pod")
+
+# d-sensitivity probe budgets for BP-Pod: (rack, remote) splits keeping the
+# paper's 1:3 flavor; d = 3, 8 (paper), 16.
+D_SWEEP = (PodSpec(1, 2), PodSpec(2, 6), PodSpec(4, 12))
+
+
+def _mean_T(preset: Preset, algo: str, name: str, pod=None) -> dict:
+    res = simulate_grid(algo, preset.cluster, preset.rates,
+                        [preset.fixed_load], preset.n_seeds, preset.cfg,
+                        pod=pod, scenario=name)
+    t = np.asarray(res.mean_completion_norm)       # [seeds, 1]
+    return {
+        "mean": float(np.nanmean(t)),
+        "sem": float(np.nanstd(t) / max(np.sqrt(t.shape[0]), 1)),
+        "drift": float(np.asarray(res.drift).mean()),
+        "local_frac": float(np.asarray(res.locality_fractions)[..., 0].mean()),
+    }
+
+
+def main(preset=None):
+    p = preset or preset_from_argv()
+    rows = {}
+    for name, scen in SCENARIOS.items():
+        t0 = time.time()
+        row = {"description": scen.description, "algos": {}}
+        d_means = {pod.d: _mean_T(p, "balanced_pandas_pod", name, pod=pod)
+                   for pod in D_SWEEP}
+        for algo in ALGOS:
+            # the d=8 sweep cell IS BP-Pod at its default PodSpec(2, 6)
+            # with the same seeds — reuse instead of re-simulating
+            row["algos"][algo] = (d_means[8] if algo == "balanced_pandas_pod"
+                                  else _mean_T(p, algo, name))
+        d_small, d_large = min(d_means), max(d_means)
+        row["d_sweep"] = {str(d): m for d, m in d_means.items()}
+        row["sensitivity_d"] = (
+            (d_means[d_small]["mean"] - d_means[d_large]["mean"])
+            / max(d_means[d_large]["mean"], 1e-9))
+        row["wall_s"] = time.time() - t0
+        rows[name] = row
+
+        bp = row["algos"]["balanced_pandas"]["mean"]
+        pod_t = row["algos"]["balanced_pandas_pod"]["mean"]
+        print(f"[scenarios] {name:16s} BP {bp:8.2f}  BP-Pod {pod_t:8.2f} "
+              f"({(pod_t - bp) / max(bp, 1e-9):+.1%})  "
+              f"JSQ-MW-Pod {row['algos']['jsq_maxweight_pod']['mean']:8.2f}  "
+              f"d-sens {row['sensitivity_d']:+.1%}  "
+              f"[{row['wall_s']:.1f}s]")
+
+    out = {"figure": "scenarios", "preset": p.name, "load": p.fixed_load,
+           "algos": list(ALGOS), "d_values": [pod.d for pod in D_SWEEP],
+           "scenarios": rows}
+    save_artifact("scenarios", out)
+    _print_table(out)
+    return out
+
+
+def _print_table(out: dict):
+    print(f"\n== scenario sweep ({out['preset']} preset, "
+          f"load {out['load']}) ==")
+    print(f"{'scenario':16s} {'BP':>9s} {'BP-Pod':>9s} {'JSQ-MW-Pod':>11s} "
+          f"{'d-sens':>8s}  {'BP-Pod local%':>13s}")
+    for name, row in out["scenarios"].items():
+        a = row["algos"]
+        def cell(r):
+            return f"{r['mean']:8.2f}{'*' if r['drift'] > 1.5 else ' '}"
+        print(f"{name:16s} {cell(a['balanced_pandas'])} "
+              f"{cell(a['balanced_pandas_pod'])} "
+              f"{cell(a['jsq_maxweight_pod']):>11s} "
+              f"{row['sensitivity_d']:+7.1%}  "
+              f"{a['balanced_pandas_pod']['local_frac']:12.1%}")
+    print("(* = unstable: tasks-in-system still growing at end of run; "
+          "expected for outage/flash transients at high load, and for "
+          "zipf scenarios near capacity — the load calibration is "
+          "placement-oblivious, see repro.scenarios docstring)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,12 @@
-"""Fault-tolerant checkpointing: msgpack+zstd leaves, atomic manifest,
+"""Fault-tolerant checkpointing: msgpack+zstd/zlib leaves, atomic manifest,
 content hashes, elastic restore onto a different mesh, async save.
 
 Layout of one checkpoint:
     <dir>/step_000123/
-        data.msgpack.zst      leaf payloads (host-gathered numpy)
-        MANIFEST.json         step, tree structure, shapes/dtypes, sha256s
+        data.msgpack.zst      leaf payloads (host-gathered numpy; .zlib when
+                              zstandard is unavailable — codec is recorded in
+                              the manifest and restore dispatches on it)
+        MANIFEST.json         step, codec, tree structure, shapes/dtypes, sha256s
 
 Guarantees:
   - Atomicity: everything is written into step_xxx.tmp.<pid> and renamed
@@ -25,28 +27,69 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # optional: ~3x faster + denser than zlib, but not in every image
+    import zstandard as zstd
+except ImportError:
+    zstd = None
+
+DEFAULT_CODEC = "zstd" if zstd is not None else "zlib"
+_CODEC_EXT = {"zstd": "zst", "zlib": "zlib"}
+
+
+def _check_codec(codec: str) -> None:
+    if codec not in _CODEC_EXT:
+        raise ValueError(f"unknown checkpoint codec {codec!r}")
+    if codec == "zstd" and zstd is None:
+        raise RuntimeError("zstandard not installed; use codec='zlib'")
+
+
+def compress(blob: bytes, codec: str = DEFAULT_CODEC) -> bytes:
+    _check_codec(codec)
+    if codec == "zstd":
+        return zstd.ZstdCompressor(level=3).compress(blob)
+    return zlib.compress(blob, level=6)
+
+
+def decompress(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd" and zstd is None:
+        raise RuntimeError(
+            "checkpoint was written with zstd but zstandard is not "
+            "installed; `pip install zstandard` to restore it")
+    _check_codec(codec)
+    if codec == "zstd":
+        return zstd.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
+
+
+def data_filename(codec: str) -> str:
+    return f"data.msgpack.{_CODEC_EXT[codec]}"
 
 
 _PENDING: list[threading.Thread] = []
 
 
 def _tree_flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only landed in jax 0.4.x-late; the
+    # tree_util spelling works across every version this repo supports.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(k) for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
     return paths, leaves, treedef
 
 
 def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None,
-         async_: bool = False, keep: int = 3) -> str:
+         async_: bool = False, keep: int = 3,
+         codec: str = DEFAULT_CODEC) -> str:
     """Write checkpoint; returns the final path."""
+    _check_codec(codec)   # fail in the caller, not the async writer thread
     paths, leaves, _ = _tree_flatten_with_paths(tree)
     host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
 
@@ -66,12 +109,12 @@ def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None,
                 "sha256": hashlib.sha256(raw).hexdigest(),
             }
         blob = msgpack.packb(payload, use_bin_type=True)
-        comp = zstd.ZstdCompressor(level=3).compress(blob)
-        with open(os.path.join(tmp, "data.msgpack.zst"), "wb") as f:
+        comp = compress(blob, codec)
+        with open(os.path.join(tmp, data_filename(codec)), "wb") as f:
             f.write(comp)
             f.flush()
             os.fsync(f.fileno())
-        manifest = {"step": step, "leaves": manifest_leaves,
+        manifest = {"step": step, "codec": codec, "leaves": manifest_leaves,
                     "extra": extra or {}}
         with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
             json.dump(manifest, f)
@@ -128,8 +171,9 @@ def restore(directory: str, step: int, target: Any,
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "MANIFEST.json")) as f:
         manifest = json.load(f)
-    with open(os.path.join(path, "data.msgpack.zst"), "rb") as f:
-        blob = zstd.ZstdDecompressor().decompress(f.read())
+    codec = manifest.get("codec", "zstd")   # pre-codec manifests were zstd
+    with open(os.path.join(path, data_filename(codec)), "rb") as f:
+        blob = decompress(f.read(), codec)
     payload = msgpack.unpackb(blob, raw=False)
 
     paths, leaves, treedef = _tree_flatten_with_paths(target)

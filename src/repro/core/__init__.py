@@ -8,13 +8,17 @@ from .cluster import (
     Cluster,
     Rates,
     capacity_arrival_rate,
+    inv_rate_matrix,
     locality_class,
+    rate_matrix,
+    safe_inv_rates,
     sample_durations,
     sample_locals,
 )
 from .policies import (
     PodSpec,
     bp_candidates_per_route,
+    inv_rate_for,
     jsqmw_candidates_per_schedule,
     lex_argmax,
     lex_argmin,

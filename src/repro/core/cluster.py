@@ -115,8 +115,38 @@ def capacity_arrival_rate(cluster: Cluster, rates: Rates, load: float) -> float:
     With symmetric random locality every task can, at the boundary, be served
     locally, so the capacity region edge is lambda = M * alpha (paper §III-A
     specialized to the symmetric traffic used in its §V simulations).
+    For heterogeneous fleets the edge generalizes to alpha * sum_m speed_m —
+    scenarios compute that via scenarios.capacity_scale.
     """
     return float(load) * cluster.M * rates.alpha
+
+
+# ---------------------------------------------------------------------------
+# Per-server rates.  A heterogeneous fleet scales the (alpha, beta, gamma)
+# class rates by a per-server speed multiplier: rate_matrix[m, c] =
+# speed[m] * rates[c].  speed == ones reproduces the symmetric model.
+# ---------------------------------------------------------------------------
+
+_DEAD_INV_RATE = 1e9  # finite stand-in for 1/rate of a speed-0 (drained)
+#                       server: routing sees an effectively infinite workload
+#                       without inf*0 NaN hazards downstream.
+
+
+def rate_matrix(rates: Rates, speed: jnp.ndarray) -> jnp.ndarray:
+    """[M, 3] per-server per-class service rates; speed: [M]."""
+    return speed[:, None] * rates.as_array()[None, :]
+
+
+def safe_inv_rates(rate_m: jnp.ndarray) -> jnp.ndarray:
+    """Reciprocal of a rate array, with the shared dead-server sentinel
+    wherever the rate is 0 (drained / failed servers)."""
+    return jnp.where(rate_m > 0, 1.0 / jnp.maximum(rate_m, 1e-12),
+                     _DEAD_INV_RATE)
+
+
+def inv_rate_matrix(rates: Rates, speed: jnp.ndarray) -> jnp.ndarray:
+    """[M, 3] reciprocal rates (mean service slots), safe at speed 0."""
+    return safe_inv_rates(rate_matrix(rates, speed))
 
 
 # ---------------------------------------------------------------------------

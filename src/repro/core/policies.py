@@ -74,6 +74,20 @@ def masked_draws(key: jax.Array, set_mask: jnp.ndarray, k: int) -> tuple[jnp.nda
     return jnp.minimum(idx, set_mask.shape[-1] - 1), valid
 
 
+def inv_rate_for(inv_rates: jnp.ndarray, idx: jnp.ndarray,
+                 cls: jnp.ndarray) -> jnp.ndarray:
+    """Reciprocal service rate of server ``idx`` for a task of class ``cls``.
+
+    inv_rates is either the homogeneous [3] vector (every server identical —
+    the seed model) or a per-server [M, 3] matrix (heterogeneous fleets,
+    scenarios); the two forms are distinguished statically by ndim so jit
+    traces stay branch-free.  idx/cls broadcast together.
+    """
+    if inv_rates.ndim == 1:
+        return inv_rates[cls]
+    return inv_rates[idx, cls]
+
+
 @dataclasses.dataclass(frozen=True)
 class PodSpec:
     """Power-of-d sampling spec: how many rack-local / remote servers to probe
@@ -133,8 +147,9 @@ def route_pod_candidates(
     Semantics shared with kernels/pod_route.py (which accelerates exactly
     this on TPU).  Ties: faster class first (candidate ordering), then
     uniformly at random.  Returns (server, class) for each task.
+    inv_rates: [3] or per-server [M, 3] (see inv_rate_for).
     """
-    scores = W[cand_idx] * inv_rates[cand_cls]
+    scores = W[cand_idx] * inv_rate_for(inv_rates, cand_idx, cand_cls)
     rnd = jax.random.uniform(key, cand_idx.shape)
     c = lex_argmin(scores, cand_cls.astype(jnp.float32), rnd, mask=valid)
     sel = jnp.take_along_axis(cand_idx, c[..., None], axis=-1)[..., 0]
@@ -154,8 +169,9 @@ def route_balanced_pandas_full(
     class_tiebreak=False ablates to uniform-random ties — the variant that
     reproduces the paper's BP-Pod>BP medium-load ordering, see EXPERIMENTS
     §Paper-claims), then ``tie_rnd`` (a [M] random priority, shared within a
-    slot — unbiased across slots)."""
-    ww = W * inv_rates[cls]
+    slot — unbiased across slots).  inv_rates: [3] or per-server [M, 3]."""
+    m = jnp.arange(cls.shape[-1], dtype=jnp.int32)
+    ww = W * inv_rate_for(inv_rates, m, cls)
     mask = jnp.ones(cls.shape, bool)
     keys = ((cls.astype(jnp.float32),) if class_tiebreak else ())
     sel = lex_argmin(ww, *keys,

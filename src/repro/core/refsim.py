@@ -7,7 +7,9 @@ structured exactly like the paper's §IV-A Balanced-Pandas(-Pod) description:
 per-arrival routing, per-server FIFO sub-queues, local>rack>remote service.
 
 tests/test_core.py checks that the vectorized JAX simulator's Little's-law
-estimate agrees with this direct measurement within sampling error.
+estimate agrees with this direct measurement within sampling error;
+tests/test_scenarios.py does the same for a heterogeneous-fleet scenario
+(per-server speeds — see ``simulate_bp_ref``'s ``speed`` parameter).
 """
 from __future__ import annotations
 
@@ -40,17 +42,32 @@ def _locality(cluster: Cluster, locals_: np.ndarray) -> np.ndarray:
 
 def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
                     warmup: int, seed: int, d_rack: int = 0,
-                    d_remote: int = 0, pod: bool = False) -> RefResult:
-    """Balanced-Pandas (pod=False) or Balanced-Pandas-Pod (pod=True)."""
+                    d_remote: int = 0, pod: bool = False,
+                    speed: np.ndarray | None = None) -> RefResult:
+    """Balanced-Pandas (pod=False) or Balanced-Pandas-Pod (pod=True).
+
+    speed: optional [M] per-server speed multipliers (constant in time) —
+    the heterogeneous-fleet model of repro.scenarios: durations are sampled
+    in speed-1 work units at the class rate, a busy server m completes
+    speed[m] units per slot, and the workload metric / routing scores use
+    each server's own [M, 3] rates.  None == all ones == the symmetric model.
+    The capacity edge matches the scenario engine: lam = load * alpha *
+    sum(speed)."""
     rng = np.random.default_rng(seed)
     M = cluster.M
     inv = 1.0 / np.array([rates.alpha, rates.beta, rates.gamma])
-    lam = load * M * rates.alpha
+    if speed is None:
+        speed = np.ones(M)
+    speed = np.asarray(speed, np.float64)
+    # per-server reciprocal rates; finite big number for speed-0 servers
+    inv_m = np.where(speed[:, None] > 0,
+                     inv[None, :] / np.maximum(speed[:, None], 1e-12), 1e9)
+    lam = load * rates.alpha * speed.sum()
 
     queues = [[[], [], []] for _ in range(M)]   # arrival slots, FIFO
     Q = np.zeros((M, 3), np.int64)
     busy = np.zeros(M, bool)
-    rem = np.zeros(M, np.int64)
+    rem = np.zeros(M, np.float64)               # remaining work units
     started_at = np.zeros(M, np.int64)          # arrival slot of in-service task
     sojourns: list[int] = []
     start_cls_counts = np.zeros(3, np.int64)
@@ -59,15 +76,15 @@ def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
 
     for t in range(T):
         # completions
-        rem[busy] -= 1
+        rem[busy] -= speed[busy]
         done = busy & (rem <= 0)
         for m in np.where(done)[0]:
             if t >= warmup and started_at[m] >= warmup:
                 sojourns.append(t - started_at[m])
         busy &= ~done
 
-        # scheduling: own queues, local first
-        for m in np.where(~busy)[0]:
+        # scheduling: own queues, local first (speed-0 servers are drained)
+        for m in np.where(~busy & (speed > 0))[0]:
             for c in range(3):
                 if queues[m][c]:
                     arr_slot = queues[m][c].pop(0)
@@ -84,7 +101,7 @@ def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
         for _ in range(rng.poisson(lam)):
             locals_ = rng.choice(M, size=cluster.n_replicas, replace=False)
             cls = _locality(cluster, locals_)
-            W = (Q * inv[None, :]).sum(axis=1)
+            W = (Q * inv_m).sum(axis=1)
             if pod:
                 cand = list(locals_)
                 rack_set = np.where(cls == RACK)[0]
@@ -96,7 +113,7 @@ def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
                 cand = np.array(cand)
             else:
                 cand = np.arange(M)
-            ww = W[cand] * inv[cls[cand]]
+            ww = W[cand] * inv_m[cand, cls[cand]]
             # ties: faster class, then random
             best = ww.min()
             tied = cand[ww == best]

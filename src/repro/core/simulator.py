@@ -31,6 +31,15 @@ Routing modes:
   batched    — all arrivals in a slot route against one workload snapshot
                (what a batching RPC scheduler does; what kernels/ accelerates).
 
+Scenarios (repro.scenarios): every run is parameterized by a ScenarioData
+pytree — a [T] arrival-intensity shape, per-server speed multipliers with
+time-indexed event windows, and optionally Zipf-skewed replica placement.
+Durations are sampled in speed-1 work units at the class rate; a busy server
+completes speed_t[m] units per slot, so a straggler slows its in-flight task
+and a drained server (speed 0) freezes and starts nothing.  The BP workload
+metric divides each sub-queue by the server's own current [M, 3] rates.
+The default `uniform` scenario reproduces the symmetric model exactly.
+
 Scheduling is batched per slot: all idle servers act against the same
 snapshot, with steal conflicts resolved by weight priority and queue-length
 caps.  ``SimConfig.s_max`` bounds scheduling attempts per slot (capped
@@ -54,11 +63,17 @@ from .cluster import (
     REMOTE,
     Cluster,
     Rates,
-    capacity_arrival_rate,
+    inv_rate_matrix,
     locality_class,
     sample_durations,
-    sample_locals,
 )
+from ..scenarios.build import (
+    ScenarioData,
+    realize,
+    sample_locals_scenario,
+    speed_at,
+)
+from ..scenarios.spec import get_scenario
 from .policies import (
     PodSpec,
     bp_candidates_per_route,
@@ -141,22 +156,24 @@ class SimResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def _progress_service(busy, rem):
-    """Advance busy servers one slot; return (busy', rem', completed_mask)."""
-    rem = jnp.where(busy, rem - 1, 0)
+def _progress_service(busy, rem, speed):
+    """Busy servers complete ``speed[m]`` work units this slot; rem is
+    float32 work remaining.  Return (busy', rem', completed_mask)."""
+    rem = jnp.where(busy, rem - speed, 0.0)
     completed = busy & (rem <= 0)
     busy = busy & ~completed
-    rem = jnp.where(busy, rem, 0)
+    rem = jnp.where(busy, rem, 0.0)
     return busy, rem, completed
 
 
-def _arrival_batch(key, cluster, lam, a_max, need_cls: bool):
-    """Poisson arrival count (clipped to a_max) + per-arrival locality."""
+def _arrival_batch(key, cluster, scen, lam_t, a_max, need_cls: bool):
+    """Poisson(lam_t) arrival count (clipped to a_max) + per-arrival
+    locality under the scenario's placement law."""
     k_n, k_loc = jax.random.split(key)
-    raw = jax.random.poisson(k_n, lam)
+    raw = jax.random.poisson(k_n, lam_t)
     n = jnp.minimum(raw, a_max)
     mask = jnp.arange(a_max) < n
-    locals_ = sample_locals(k_loc, cluster, a_max)
+    locals_ = sample_locals_scenario(k_loc, cluster, scen, a_max)
     cls = locality_class(cluster, locals_) if need_cls else None
     return mask, locals_, cls, (raw - n).astype(jnp.float32)
 
@@ -200,32 +217,38 @@ def _acc(sums: RawSums, *, in_half2, N, arr, clipped, comp, starts, routed,
 class BPState(NamedTuple):
     Q: jnp.ndarray          # int32 [M, 3] sub-queue lengths
     busy: jnp.ndarray       # bool  [M]
-    rem: jnp.ndarray        # int32 [M] remaining service slots
+    rem: jnp.ndarray        # f32   [M] remaining service work units
     cls: jnp.ndarray        # int32 [M] class of in-service task
 
     @staticmethod
     def zero(M: int) -> "BPState":
         return BPState(
             jnp.zeros((M, 3), jnp.int32), jnp.zeros(M, bool),
-            jnp.zeros(M, jnp.int32), jnp.zeros(M, jnp.int32),
+            jnp.zeros(M, jnp.float32), jnp.zeros(M, jnp.int32),
         )
 
 
 def _bp_workload(Q: jnp.ndarray, inv_rates: jnp.ndarray) -> jnp.ndarray:
-    """Paper §IV-A: W_m = Q^l/alpha + Q^k/beta + Q^r/gamma."""
-    return (Q.astype(jnp.float32) * inv_rates[None, :]).sum(axis=-1)
+    """Paper §IV-A: W_m = Q^l/alpha_m + Q^k/beta_m + Q^r/gamma_m.
+
+    inv_rates: [3] (homogeneous) or per-server [M, 3] (heterogeneous)."""
+    if inv_rates.ndim == 1:
+        inv_rates = inv_rates[None, :]
+    return (Q.astype(jnp.float32) * inv_rates).sum(axis=-1)
 
 
-def _bp_schedule(key, Q, busy, rem, cls, rates, service_dist, sigma):
+def _bp_schedule(key, Q, busy, rem, cls, rates, service_dist, sigma,
+                 can_serve):
     """Idle servers start their own head-of-class task: local > rack > remote.
-    Purely local information — no cross-server messages (paper §IV-A)."""
+    Purely local information — no cross-server messages (paper §IV-A).
+    can_serve: bool [M] — drained / failed servers start nothing."""
     has = Q > 0
     pick = jnp.argmax(has, axis=1).astype(jnp.int32)   # first nonempty class
-    start = (~busy) & has.any(axis=1)
+    start = (~busy) & has.any(axis=1) & can_serve
     Q = Q - (jax.nn.one_hot(pick, 3, dtype=jnp.int32) * start[:, None].astype(jnp.int32))
     dur = sample_durations(key, pick, rates, service_dist, sigma)
     busy = busy | start
-    rem = jnp.where(start, dur, rem)
+    rem = jnp.where(start, dur.astype(jnp.float32), rem)
     cls = jnp.where(start, pick, cls)
     starts_by_class = (jax.nn.one_hot(pick, 3, dtype=jnp.float32)
                        * start[:, None].astype(jnp.float32)).sum(axis=0)
@@ -267,18 +290,20 @@ def _bp_route_batch(key, cluster, Q, cls_arr, locals_, mask, inv_rates, pod,
 
 
 def _bp_step(state: BPState, sums: RawSums, key, *, cluster, rates, cfg,
-             lam, pod, a_max, measure, in_half2, class_tiebreak=True):
-    inv_rates = 1.0 / rates.as_array()
+             lam_t, scen, speed, inv_rate_m, pod, a_max, measure, in_half2,
+             class_tiebreak=True):
     k_sched, k_arr, k_route = jax.random.split(key, 3)
 
-    busy, rem, completed = _progress_service(state.busy, state.rem)
+    busy, rem, completed = _progress_service(state.busy, state.rem, speed)
     Q, busy, rem, cls_serv, starts, n_started = _bp_schedule(
-        k_sched, state.Q, busy, rem, state.cls, rates, cfg.service_dist, cfg.sigma)
+        k_sched, state.Q, busy, rem, state.cls, rates, cfg.service_dist,
+        cfg.sigma, can_serve=speed > 0)
 
-    mask, locals_, cls_arr, clipped = _arrival_batch(k_arr, cluster, lam,
-                                                     a_max, need_cls=True)
+    mask, locals_, cls_arr, clipped = _arrival_batch(k_arr, cluster, scen,
+                                                     lam_t, a_max,
+                                                     need_cls=True)
     Q, sel_cls = _bp_route_batch(k_route, cluster, Q, cls_arr, locals_, mask,
-                                 inv_rates, pod,
+                                 inv_rate_m, pod,
                                  sequential=(cfg.route_mode == "sequential"),
                                  class_tiebreak=class_tiebreak)
 
@@ -309,7 +334,7 @@ class SQState(NamedTuple):
     @staticmethod
     def zero(M: int) -> "SQState":
         return SQState(jnp.zeros(M, jnp.int32), jnp.zeros(M, bool),
-                       jnp.zeros(M, jnp.int32), jnp.zeros(M, jnp.int32))
+                       jnp.zeros(M, jnp.float32), jnp.zeros(M, jnp.int32))
 
 
 def _grant_conflicts(tgt, prio, has, Q, key, M):
@@ -329,19 +354,21 @@ def _grant_conflicts(tgt, prio, has, Q, key, M):
 
 
 def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
-                 pod: Optional[PodSpec]):
+                 pod: Optional[PodSpec], speed):
     """Batched scheduling for the single-queue family (see module docstring).
 
-    variant: "maxweight" (argmax alpha/beta/gamma-weighted queue lengths over
-    all M or over 1+d' Pod samples) or "priority" (own > longest-in-rack >
-    longest-anywhere)."""
+    variant: "maxweight" (argmax of rate-weighted queue lengths — the serving
+    server's own per-class rates, so a fast server outbids a slow one for the
+    same queue — over all M or over 1+d' Pod samples) or "priority" (own >
+    longest-in-rack > longest-anywhere).  speed: [M] current multipliers;
+    speed-0 servers are ineligible."""
     M = cluster.M
     S = min(cfg.s_max, M)
     k_rows, k_cand, k_tie, k_grant, k_dur = jax.random.split(key, 5)
 
     idle = ~busy
     anyq = (Q > 0).any()
-    eligible = idle & ((Q > 0) | anyq)
+    eligible = idle & ((Q > 0) | anyq) & (speed > 0)
     # pick up to S eligible servers (random priority; the rest retry next slot)
     rkey = jnp.where(eligible, jax.random.uniform(k_rows, (M,)), _INF)
     order = jnp.argsort(rkey)
@@ -351,7 +378,7 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
     qf = Q.astype(jnp.float32)
     if variant == "maxweight" and pod is None:
         rel = _relation_rows(cluster, rows)              # [S, M]
-        w = qf[None, :] * rates.as_array()[rel]
+        w = qf[None, :] * rates.as_array()[rel] * speed[rows][:, None]
         cand = jnp.broadcast_to((Q > 0)[None, :], (S, M))
         rnd = jax.random.uniform(k_tie, (S, M))
         tgt = lex_argmax(w, rnd, mask=cand)
@@ -367,7 +394,7 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
             jnp.full((S, 1), LOCAL, jnp.int32),
             jnp.full((S, pod.d_rack), RACK, jnp.int32),
             jnp.full((S, pod.d_remote), REMOTE, jnp.int32)], axis=1)
-        w = qf[cand_idx] * rates.as_array()[rel]
+        w = qf[cand_idx] * rates.as_array()[rel] * speed[rows][:, None]
         cand = Q[cand_idx] > 0
         rnd = jax.random.uniform(k_tie, cand_idx.shape)
         c = lex_argmax(w, rnd, mask=cand)
@@ -405,7 +432,8 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
     dur = sample_durations(k_dur, start_cls, rates, cfg.service_dist, cfg.sigma)
 
     busy = busy.at[rows].set(busy[rows] | granted)
-    rem = rem.at[rows].set(jnp.where(granted, dur, rem[rows]))
+    rem = rem.at[rows].set(jnp.where(granted, dur.astype(jnp.float32),
+                                     rem[rows]))
     cls = cls.at[rows].set(jnp.where(granted, start_cls, cls[rows]))
     starts = (jax.nn.one_hot(start_cls, 3, dtype=jnp.float32)
               * granted[:, None].astype(jnp.float32)).sum(axis=0)
@@ -413,15 +441,19 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
     return Q, busy, rem, cls, starts, n_dec
 
 
-def _sq_step(state: SQState, sums: RawSums, key, *, cluster, rates, cfg, lam,
-             variant, pod, a_max, measure, in_half2):
+def _sq_step(state: SQState, sums: RawSums, key, *, cluster, rates, cfg,
+             lam_t, scen, speed, inv_rate_m, variant, pod, a_max, measure,
+             in_half2):
+    del inv_rate_m  # JSQ routing is workload-metric-free
     k_sched, k_arr, k_route = jax.random.split(key, 3)
 
-    busy, rem, completed = _progress_service(state.busy, state.rem)
+    busy, rem, completed = _progress_service(state.busy, state.rem, speed)
     Q, busy, rem, cls_serv, starts, n_sched = _sq_schedule(
-        k_sched, cluster, state.Q, busy, rem, state.cls, rates, cfg, variant, pod)
+        k_sched, cluster, state.Q, busy, rem, state.cls, rates, cfg, variant,
+        pod, speed)
 
-    mask, locals_, _cls, clipped = _arrival_batch(k_arr, cluster, lam, a_max,
+    mask, locals_, _cls, clipped = _arrival_batch(k_arr, cluster, scen,
+                                                  lam_t, a_max,
                                                   need_cls=False)
     if cfg.route_mode == "sequential":
         def route_one(Qc, xs):
@@ -459,24 +491,26 @@ class FCFSState(NamedTuple):
     @staticmethod
     def zero(M: int) -> "FCFSState":
         return FCFSState(jnp.zeros((), jnp.int32), jnp.zeros(M, bool),
-                         jnp.zeros(M, jnp.int32), jnp.zeros(M, jnp.int32))
+                         jnp.zeros(M, jnp.float32), jnp.zeros(M, jnp.int32))
 
 
 def _fcfs_step(state: FCFSState, sums: RawSums, key, *, cluster, rates, cfg,
-               lam, a_max, measure, in_half2):
+               lam_t, scen, speed, inv_rate_m, a_max, measure, in_half2):
+    del inv_rate_m  # FCFS is workload-metric-free
     M = cluster.M
     G = min(cfg.s_max, M)
     k_rank, k_loc, k_dur, k_arr = jax.random.split(key, 4)
 
-    busy, rem, completed = _progress_service(state.busy, state.rem)
-    idle = ~busy
+    busy, rem, completed = _progress_service(state.busy, state.rem, speed)
+    idle = (~busy) & (speed > 0)
     r = jnp.where(idle, jax.random.uniform(k_rank, (M,)), _INF)
     rows = jnp.argsort(r)[:G]
     grant = idle[rows] & (jnp.arange(G) < state.C)
     # locality of the grabbed task relative to the grabbing server: the task's
-    # replica triple is iid uniform and independent of everything else, so
-    # sampling it at dequeue time is distributionally identical.
-    locals_g = sample_locals(k_loc, cluster, G)            # [G, n_rep]
+    # replica triple is iid (uniform or chunk-skewed) and independent of
+    # everything else, so sampling it at dequeue time is distributionally
+    # identical.
+    locals_g = sample_locals_scenario(k_loc, cluster, scen, G)  # [G, n_rep]
     rack_of = cluster.rack_of
     is_local = (locals_g == rows[:, None]).any(axis=1)
     in_rack = (rack_of[locals_g] == rack_of[rows][:, None]).any(axis=1)
@@ -485,12 +519,13 @@ def _fcfs_step(state: FCFSState, sums: RawSums, key, *, cluster, rates, cfg,
     dur = sample_durations(k_dur, start_cls, rates, cfg.service_dist, cfg.sigma)
     C = state.C - grant.sum().astype(jnp.int32)
     busy = busy.at[rows].set(busy[rows] | grant)
-    rem = rem.at[rows].set(jnp.where(grant, dur, rem[rows]))
+    rem = rem.at[rows].set(jnp.where(grant, dur.astype(jnp.float32),
+                                     rem[rows]))
     cls = state.cls.at[rows].set(jnp.where(grant, start_cls, state.cls[rows]))
     starts = (jax.nn.one_hot(start_cls, 3, dtype=jnp.float32)
               * grant[:, None].astype(jnp.float32)).sum(axis=0)
 
-    mask, _, _, clipped = _arrival_batch(k_arr, cluster, lam, a_max,
+    mask, _, _, clipped = _arrival_batch(k_arr, cluster, scen, lam_t, a_max,
                                          need_cls=False)
     C = C + mask.sum().astype(jnp.int32)
 
@@ -537,8 +572,8 @@ def _pod_for(algo: str, pod: Optional[PodSpec]) -> Optional[PodSpec]:
 @functools.partial(
     jax.jit,
     static_argnames=("algo", "cluster", "rates", "cfg", "pod", "a_max"))
-def _run(key, lam, *, algo: str, cluster: Cluster, rates: Rates,
-         cfg: SimConfig, pod: Optional[PodSpec], a_max: int):
+def _run(key, lam, scen: ScenarioData, *, algo: str, cluster: Cluster,
+         rates: Rates, cfg: SimConfig, pod: Optional[PodSpec], a_max: int):
     half2_from = cfg.warmup + (cfg.T - cfg.warmup) // 2
 
     def step(carry, t):
@@ -546,7 +581,10 @@ def _run(key, lam, *, algo: str, cluster: Cluster, rates: Rates,
         k = jax.random.fold_in(key, t)
         measure = t >= cfg.warmup
         in_half2 = t >= half2_from
-        kw = dict(cluster=cluster, rates=rates, cfg=cfg, lam=lam,
+        speed = speed_at(scen, t)                       # [M]
+        kw = dict(cluster=cluster, rates=rates, cfg=cfg,
+                  lam_t=lam * scen.lam_shape[t], scen=scen, speed=speed,
+                  inv_rate_m=inv_rate_matrix(rates, speed),
                   a_max=a_max, measure=measure, in_half2=in_half2)
         if algo in ("balanced_pandas", "balanced_pandas_pod",
                     "balanced_pandas_randomtie"):
@@ -577,33 +615,38 @@ def _run(key, lam, *, algo: str, cluster: Cluster, rates: Rates,
 
 def simulate(algo: str, cluster: Cluster, rates: Rates, load: float,
              key: jax.Array, cfg: SimConfig = SimConfig(),
-             pod: Optional[PodSpec] = None) -> SimResult:
+             pod: Optional[PodSpec] = None, scenario=None) -> SimResult:
     """Run one simulation and return derived metrics.
 
-    load: fraction of the capacity boundary (lambda = load * M * alpha).
+    load: fraction of the (scenario-aware, time-averaged) capacity boundary;
+    for the default `uniform` scenario that is lambda = load * M * alpha.
+    scenario: a registered scenario name, a scenarios.Scenario, or None.
     """
-    lam = capacity_arrival_rate(cluster, rates, load)
+    scen, lam_cap = realize(get_scenario(scenario), cluster, rates, cfg.T)
+    lam = float(load) * lam_cap
     pod = _pod_for(algo, pod)
-    a_max = cfg.resolve_a_max(lam)
-    sums = _run(key, jnp.float32(lam), algo=algo, cluster=cluster, rates=rates,
-                cfg=cfg, pod=pod, a_max=a_max)
+    a_max = cfg.resolve_a_max(lam * float(jnp.max(scen.lam_shape)))
+    sums = _run(key, jnp.float32(lam), scen, algo=algo, cluster=cluster,
+                rates=rates, cfg=cfg, pod=pod, a_max=a_max)
     return summarize(sums, algo, cluster, rates, pod)
 
 
 def simulate_grid(algo: str, cluster: Cluster, rates: Rates, loads,
                   n_seeds: int, cfg: SimConfig = SimConfig(),
-                  pod: Optional[PodSpec] = None, seed0: int = 0) -> SimResult:
+                  pod: Optional[PodSpec] = None, seed0: int = 0,
+                  scenario=None) -> SimResult:
     """Vectorized sweep: one compile, vmapped over loads x seeds.
     Returns SimResult with leading dims [n_seeds, n_loads]."""
     import numpy as _np
-    lam = jnp.array([capacity_arrival_rate(cluster, rates, l) for l in loads],
-                    jnp.float32)
+    scen, lam_cap = realize(get_scenario(scenario), cluster, rates, cfg.T)
+    lam = jnp.array([l * lam_cap for l in loads], jnp.float32)
     pod = _pod_for(algo, pod)
-    a_max = cfg.resolve_a_max(float(_np.max(_np.asarray(lam))))
+    a_max = cfg.resolve_a_max(float(_np.max(_np.asarray(lam)))
+                              * float(jnp.max(scen.lam_shape)))
     keys = jax.random.split(jax.random.PRNGKey(seed0), n_seeds)
 
     def one(key, l):
-        return _run(key, l, algo=algo, cluster=cluster, rates=rates,
+        return _run(key, l, scen, algo=algo, cluster=cluster, rates=rates,
                     cfg=cfg, pod=pod, a_max=a_max)
 
     sums = jax.vmap(lambda k: jax.vmap(lambda l: one(k, l))(lam))(keys)

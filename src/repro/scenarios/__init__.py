@@ -1,0 +1,79 @@
+"""Scenario engine: heterogeneous fleets, non-stationary traffic, skewed data.
+
+The paper's model (and the seed simulator) is symmetric along every axis the
+paper's *title* is about: all M servers run at the same speed, arrivals are a
+stationary Poisson stream, and each task's replica triple is uniform over
+servers.  This package breaks each symmetry independently and composably,
+so Balanced-Pandas(-Pod) and the JSQ family can be stress-tested where their
+guarantees actually differ:
+
+  fleet heterogeneity  (``FleetSpec``)
+      Per-server speed multipliers (persistently slow racks / servers) plus
+      time-indexed event windows — straggler onset & recovery, drains and
+      outages (multiplier 0).  A server's effective service *rate* for
+      locality class c at slot t is  rates[c] * speed_t[m]:  an [M, 3] rate
+      matrix that varies over time.
+
+  traffic shape        (``TrafficSpec``)
+      Stationary Poisson, 2-state MMPP bursts, diurnal sinusoid, and
+      flash-crowd steps.  Realized host-side as a length-T intensity trace
+      normalized to mean 1, so a requested ``load`` keeps its meaning as a
+      fraction of time-averaged capacity.
+
+  data placement skew  (``PlacementSpec``)
+      Zipf chunk popularity: tasks draw a chunk from a Zipf law and inherit
+      that chunk's fixed replica triple, producing hot local-server triples
+      instead of the seed's uniform ``sample_locals``.
+
+Per-server rate model
+---------------------
+Service durations are still sampled once at service start, in *speed-1 work
+units* at the class rate (geometric / log-normal exactly as before); a busy
+server then completes ``speed_t[m]`` units of work per slot.  For a constant
+speed s this reproduces rate scaling (mean duration 1/(s * rates[c]) slots)
+while also doing the right thing mid-flight: a server that *becomes* a
+straggler slows the task it is already serving — which is what a real
+straggler does — and a drained server (speed 0) freezes, neither finishing
+nor starting work.  The Balanced-Pandas workload metric divides each
+sub-queue by the server's *own current* rate, W_m = sum_c Q[m,c] /
+(speed_t[m] * rates[c]), so routing sees stragglers as long queues.
+
+Capacity under heterogeneity: at the boundary every task is served locally
+at its server's own speed, so the region edge generalizes from M * alpha to
+alpha * sum_m speed_m, time-averaged over the run (``Scenario`` realization
+computes this so ``load`` stays comparable across scenarios).  This edge
+accounts for the *fleet* axis only: placement skew can shrink the true
+stable region further (a hot chunk's triple saturates its three local
+servers and the excess must be served rack-local/remote at beta/gamma), so
+for Zipf scenarios ``load`` is a fraction of the placement-free bound and
+high-load runs may be supercritical — the simulator's ``drift`` metric
+flags that explicitly.  A placement-aware capacity LP is a ROADMAP item.
+
+Specs are tiny frozen dataclasses (a registry of named instances lives in
+``SCENARIOS``); ``realize()`` turns one into a ``ScenarioData`` pytree of
+arrays that the jit'd simulator scans over — nothing in the hot loop
+branches on Python state.
+"""
+from .spec import (
+    SCENARIOS,
+    FleetSpec,
+    PlacementSpec,
+    Scenario,
+    TrafficSpec,
+    WindowSpec,
+    get_scenario,
+    register,
+    scenario_names,
+)
+from .build import (
+    ScenarioData,
+    arrival_counts,
+    capacity_scale,
+    realize,
+    sample_locals_scenario,
+    speed_at,
+    speed_trace,
+    traffic_shape,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

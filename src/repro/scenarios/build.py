@@ -1,0 +1,223 @@
+"""Realize a Scenario spec into arrays the jit'd simulator scans over."""
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .spec import FleetSpec, PlacementSpec, Scenario, TrafficSpec, WindowSpec
+
+if TYPE_CHECKING:  # runtime import would cycle: core.simulator imports us
+    from ..core.cluster import Cluster, Rates
+
+
+class ScenarioData(NamedTuple):
+    """Pytree of realized scenario arrays (dynamic jit operands).
+
+    lam_shape     [T]  arrival-intensity shape, mean ~1 (multiplies lambda)
+    base_speed    [M]  persistent per-server speed multipliers
+    win_start/end [E]  event-window slot bounds (E may be 0)
+    win_mult      [E, M] per-window speed multiplier (1.0 = unaffected)
+    chunk_logits  [C]  log chunk popularity, or None for uniform placement
+    chunk_locals  [C, n_replicas] each chunk's replica triple, or None
+    """
+
+    lam_shape: jnp.ndarray
+    base_speed: jnp.ndarray
+    win_start: jnp.ndarray
+    win_end: jnp.ndarray
+    win_mult: jnp.ndarray
+    chunk_logits: Optional[jnp.ndarray]
+    chunk_locals: Optional[jnp.ndarray]
+
+    @property
+    def M(self) -> int:
+        return self.base_speed.shape[0]
+
+
+def speed_at(scen: ScenarioData, t) -> jnp.ndarray:
+    """[M] effective speed at slot ``t`` (jit-safe; t may be traced).
+
+    Windows compose multiplicatively when they overlap."""
+    active = (scen.win_start <= t) & (t < scen.win_end)          # [E]
+    mult = jnp.where(active[:, None], scen.win_mult, 1.0)        # [E, M]
+    return scen.base_speed * jnp.prod(mult, axis=0)
+
+
+def speed_trace(scen: ScenarioData, T: int) -> np.ndarray:
+    """[T, M] host-side speed trace (tests / plots; not the hot path)."""
+    start = np.asarray(scen.win_start)[None, :]                  # [1, E]
+    end = np.asarray(scen.win_end)[None, :]
+    t = np.arange(T)[:, None]                                    # [T, 1]
+    active = (start <= t) & (t < end)                            # [T, E]
+    mult = np.where(active[:, :, None], np.asarray(scen.win_mult)[None], 1.0)
+    return np.asarray(scen.base_speed)[None, :] * mult.prod(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Fleet axis
+# ---------------------------------------------------------------------------
+
+
+def _window_mask(w: WindowSpec, cluster: "Cluster") -> np.ndarray:
+    m = np.arange(cluster.M)
+    if w.rack is not None:
+        return (m // cluster.rack_size) == w.rack
+    if w.servers is not None:
+        lo, hi = w.servers
+        return (m >= lo) & (m < hi)
+    if w.every is not None:
+        return (m % w.every) == w.phase
+    raise ValueError(f"window {w} selects no servers")
+
+
+def _fleet_arrays(fleet: FleetSpec, cluster: "Cluster", T: int,
+                  rng: np.random.Generator):
+    M = cluster.M
+    base = np.ones(M, np.float32)
+    for r, s in enumerate(fleet.rack_speeds):
+        base[r * cluster.rack_size:(r + 1) * cluster.rack_size] = s
+    if fleet.slow_frac > 0.0 and fleet.slow_mult != 1.0:
+        k = max(1, int(round(fleet.slow_frac * M)))
+        base[rng.choice(M, size=k, replace=False)] *= fleet.slow_mult
+    E = len(fleet.windows)
+    start = np.zeros(E, np.int32)
+    end = np.zeros(E, np.int32)
+    mult = np.ones((E, M), np.float32)
+    for e, w in enumerate(fleet.windows):
+        start[e] = int(round(w.t0 * T))
+        end[e] = int(round(w.t1 * T))
+        mult[e, _window_mask(w, cluster)] = w.mult
+    return base, start, end, mult
+
+
+def capacity_scale(scen: ScenarioData, T: int) -> float:
+    """Time-averaged sum_m speed_t[m] / M: the heterogeneous capacity region
+    edge relative to the symmetric M * alpha.  Exact — windows make speed
+    piecewise-constant, so integrate over the boundary segments."""
+    start = np.asarray(scen.win_start)
+    end = np.asarray(scen.win_end)
+    bounds = np.unique(np.clip(np.concatenate(
+        [[0, T], start, end]), 0, T)).astype(np.int64)
+    total = 0.0
+    base = np.asarray(scen.base_speed, np.float64)
+    mult = np.asarray(scen.win_mult, np.float64)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        if hi <= lo:
+            continue
+        active = (start <= lo) & (lo < end)                      # [E]
+        seg = base * np.where(active[:, None], mult, 1.0).prod(axis=0)
+        total += float(seg.sum()) * (hi - lo)
+    return total / (T * scen.M)
+
+
+# ---------------------------------------------------------------------------
+# Traffic axis
+# ---------------------------------------------------------------------------
+
+
+def traffic_shape(spec: TrafficSpec, T: int,
+                  rng: np.random.Generator) -> np.ndarray:
+    """[T] float32 intensity shape, normalized to mean 1 over the run."""
+    t = np.arange(T, dtype=np.float64)
+    if spec.kind == "stationary":
+        shape = np.ones(T)
+    elif spec.kind == "diurnal":
+        shape = 1.0 + spec.amp * np.sin(2.0 * math.pi * spec.cycles * t / T)
+    elif spec.kind == "flash":
+        shape = np.ones(T)
+        shape[int(spec.t0 * T):int(spec.t1 * T)] = spec.peak
+    elif spec.kind == "mmpp":
+        # 2-state Markov chain simulated host-side; start from the
+        # stationary distribution so warmup statistics are unbiased.
+        p01, p10 = spec.p_enter, spec.p_exit
+        pi_burst = p01 / max(p01 + p10, 1e-12)
+        state = 1 if rng.random() < pi_burst else 0
+        shape = np.empty(T)
+        u = rng.random(T)
+        for i in range(T):
+            shape[i] = spec.burst if state else 1.0
+            if state == 0 and u[i] < p01:
+                state = 1
+            elif state == 1 and u[i] < p10:
+                state = 0
+    else:
+        raise ValueError(f"unknown traffic kind {spec.kind!r}")
+    # clamp before normalizing: amp > 1 diurnals would otherwise produce
+    # negative intensities (invalid Poisson rates) instead of dead zones
+    shape = np.maximum(shape, 0.0)
+    shape = shape / max(shape.mean(), 1e-12)
+    return shape.astype(np.float32)
+
+
+def arrival_counts(spec: TrafficSpec, T: int, mean_per_tick: float,
+                   seed: int = 0) -> np.ndarray:
+    """[T] int64 Poisson arrival counts following the traffic shape — the
+    scenario-driven arrival trace the serve engine replays."""
+    rng = np.random.default_rng(seed)
+    return rng.poisson(mean_per_tick * traffic_shape(spec, T, rng))
+
+
+# ---------------------------------------------------------------------------
+# Placement axis
+# ---------------------------------------------------------------------------
+
+
+def _placement_arrays(spec: PlacementSpec, cluster: "Cluster",
+                      rng: np.random.Generator):
+    if spec.kind == "uniform":
+        return None, None
+    if spec.kind != "zipf":
+        raise ValueError(f"unknown placement kind {spec.kind!r}")
+    C = spec.chunks_per_server * cluster.M
+    popularity = np.arange(1, C + 1, dtype=np.float64) ** (-spec.zipf_s)
+    logits = np.log(popularity / popularity.sum()).astype(np.float32)
+    # each chunk's replica triple: distinct servers, uniform placement —
+    # the *popularity* is skewed, not the placement itself (HDFS-style)
+    order = np.argsort(rng.random((C, cluster.M)), axis=1)
+    locals_ = order[:, :cluster.n_replicas].astype(np.int32)
+    return jnp.asarray(logits), jnp.asarray(locals_)
+
+
+def sample_locals_scenario(key: jax.Array, cluster: "Cluster",
+                           scen: ScenarioData, batch: int) -> jnp.ndarray:
+    """Replica triples for ``batch`` tasks under the scenario's placement.
+
+    Uniform placement defers to core.cluster.sample_locals; Zipf placement
+    draws a chunk from the popularity law and returns its fixed triple."""
+    from ..core.cluster import sample_locals
+
+    if scen.chunk_locals is None:
+        return sample_locals(key, cluster, batch)
+    cidx = jax.random.categorical(key, scen.chunk_logits, shape=(batch,))
+    return scen.chunk_locals[cidx]
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def realize(scenario: Scenario, cluster: "Cluster", rates: "Rates",
+            T: int) -> tuple[ScenarioData, float]:
+    """Build the ScenarioData arrays + the capacity-region edge (tasks/slot
+    at load = 1) for this scenario.  Deterministic in ``scenario.seed``."""
+    rng = np.random.default_rng(scenario.seed)
+    base, wstart, wend, wmult = _fleet_arrays(scenario.fleet, cluster, T, rng)
+    lam_shape = traffic_shape(scenario.traffic, T, rng)
+    chunk_logits, chunk_locals = _placement_arrays(
+        scenario.placement, cluster, rng)
+    scen = ScenarioData(
+        lam_shape=jnp.asarray(lam_shape),
+        base_speed=jnp.asarray(base),
+        win_start=jnp.asarray(wstart),
+        win_end=jnp.asarray(wend),
+        win_mult=jnp.asarray(wmult),
+        chunk_logits=chunk_logits,
+        chunk_locals=chunk_locals,
+    )
+    lam_cap = rates.alpha * cluster.M * capacity_scale(scen, T)
+    return scen, lam_cap

@@ -1,0 +1,169 @@
+"""Scenario specs + the named-scenario registry (see package docstring)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSpec:
+    """A time window during which a set of servers changes speed.
+
+    t0/t1 are fractions of the run length T (scenarios are T-agnostic);
+    the affected set is a rack, an [lo, hi) server-id interval, or every
+    f-th server — whichever selector is not None.  mult multiplies the
+    servers' base speed inside the window (0.0 == outage/drain)."""
+
+    t0: float
+    t1: float
+    mult: float
+    rack: Optional[int] = None
+    servers: Optional[tuple] = None        # (lo, hi) server-id interval
+    every: Optional[int] = None            # servers m with m % every == phase
+    phase: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """Persistent per-server speeds + transient event windows."""
+
+    rack_speeds: tuple = ()                # per-rack multiplier ((): all 1.0)
+    slow_frac: float = 0.0                 # fraction of servers slowed ...
+    slow_mult: float = 1.0                 # ... persistently, by this factor
+    windows: tuple = ()                    # of WindowSpec
+
+    @property
+    def uniform(self) -> bool:
+        return (not self.rack_speeds and not self.windows
+                and (self.slow_frac == 0.0 or self.slow_mult == 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficSpec:
+    """Arrival-intensity shape, normalized to mean 1 at realization."""
+
+    kind: str = "stationary"               # |diurnal|flash|mmpp
+    # diurnal: lam(t) = 1 + amp * sin(2 pi * cycles * t / T)
+    amp: float = 0.35
+    cycles: float = 3.0
+    # flash crowd: intensity steps to `peak` x base inside [t0, t1) x T
+    t0: float = 0.5
+    t1: float = 0.6
+    peak: float = 2.5
+    # mmpp: 2-state chain, burst state `burst` x the quiet intensity
+    burst: float = 3.0
+    p_enter: float = 0.003                 # quiet -> burst per slot
+    p_exit: float = 0.01                   # burst -> quiet per slot
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementSpec:
+    """Where chunk replicas live; 'zipf' makes some triples hot."""
+
+    kind: str = "uniform"                  # |zipf
+    zipf_s: float = 1.2                    # popularity exponent
+    chunks_per_server: int = 4             # catalog size C = this * M
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    fleet: FleetSpec = FleetSpec()
+    traffic: TrafficSpec = TrafficSpec(kind="stationary")
+    placement: PlacementSpec = PlacementSpec()
+    seed: int = 0                          # host-side realization seed
+    description: str = ""
+
+
+SCENARIOS: dict[str, Scenario] = {}
+
+
+def register(s: Scenario) -> Scenario:
+    if s.name in SCENARIOS:
+        raise ValueError(f"scenario {s.name!r} already registered")
+    SCENARIOS[s.name] = s
+    return s
+
+
+def scenario_names() -> tuple[str, ...]:
+    return tuple(SCENARIOS)
+
+
+def get_scenario(s: Union[str, Scenario, None]) -> Scenario:
+    if s is None:
+        return SCENARIOS["uniform"]
+    if isinstance(s, Scenario):
+        return s
+    try:
+        return SCENARIOS[s]
+    except KeyError:
+        raise KeyError(f"unknown scenario {s!r}; "
+                       f"registered: {sorted(SCENARIOS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# The named registry.  `uniform` reproduces the seed simulator exactly; each
+# other scenario breaks one axis (or, for the storm, all three).
+# ---------------------------------------------------------------------------
+
+register(Scenario(
+    "uniform",
+    description="the paper's symmetric baseline: equal speeds, stationary "
+                "Poisson, uniform replica placement"))
+
+register(Scenario(
+    "slow_rack",
+    fleet=FleetSpec(rack_speeds=(0.5,)),   # rack 0 at half speed, rest 1.0
+    description="one rack persistently at half speed (heterogeneous-server "
+                "baseline; GB-PANDAS's motivating asymmetry)"))
+
+register(Scenario(
+    "straggler_wave",
+    fleet=FleetSpec(windows=(
+        WindowSpec(t0=0.20, t1=0.40, mult=0.25, every=10, phase=0),
+        WindowSpec(t0=0.35, t1=0.55, mult=0.25, every=10, phase=3),
+        WindowSpec(t0=0.50, t1=0.70, mult=0.25, every=10, phase=6),
+        WindowSpec(t0=0.65, t1=0.85, mult=0.25, every=10, phase=9),
+    )),
+    description="overlapping straggler cohorts: every 10th server drops to "
+                "quarter speed, onset staggered, each recovering"))
+
+register(Scenario(
+    "rack_outage",
+    fleet=FleetSpec(windows=(
+        WindowSpec(t0=0.45, t1=0.55, mult=0.0, rack=0),)),
+    description="rack 0 drains completely for 10% of the run, then "
+                "recovers (failure window as a zero rate mask)"))
+
+register(Scenario(
+    "diurnal_burst",
+    traffic=TrafficSpec(kind="diurnal", amp=0.35, cycles=3.0),
+    description="sinusoidal arrival intensity, +/-35% around the mean over "
+                "3 cycles (diurnal load)"))
+
+register(Scenario(
+    "flash_crowd",
+    traffic=TrafficSpec(kind="flash", t0=0.5, t1=0.6, peak=2.5),
+    description="stationary arrivals with a 2.5x step for 10% of the run "
+                "(flash crowd / retry storm)"))
+
+register(Scenario(
+    "mmpp_bursty",
+    traffic=TrafficSpec(kind="mmpp", burst=3.0, p_enter=0.003, p_exit=0.01),
+    description="Markov-modulated Poisson: random bursts at 3x the quiet "
+                "intensity (bursty production traffic)"))
+
+register(Scenario(
+    "zipf_hotspot",
+    placement=PlacementSpec(kind="zipf", zipf_s=1.2),
+    description="Zipf(1.2) chunk popularity: a few replica triples receive "
+                "most of the tasks (hot data)"))
+
+register(Scenario(
+    "hetero_storm",
+    fleet=FleetSpec(rack_speeds=(0.5,), windows=(
+        WindowSpec(t0=0.30, t1=0.50, mult=0.25, every=10, phase=0),)),
+    traffic=TrafficSpec(kind="diurnal", amp=0.30, cycles=3.0),
+    placement=PlacementSpec(kind="zipf", zipf_s=1.1),
+    description="all three axes at once: slow rack + straggler cohort + "
+                "diurnal traffic + Zipf placement"))

@@ -12,6 +12,13 @@ request batch with one kernel call:
 followed by kernels.queue_update (fused scatter + workload refresh).  The
 complexity counter the benchmarks report (probes per decision) is exactly
 the candidate-set width handed to the kernel.
+
+Heterogeneous fleets: pass ``rate_matrix`` ([M, 3] per-replica per-class
+service rates, e.g. from repro.core.rate_matrix with scenario speeds).  The
+workload metric and routing scores then divide by each replica's *own*
+rates; this path scores candidates in plain JAX (the Pallas kernels encode
+the homogeneous 3-vector) with identical argmin/tie semantics and the same
+probe accounting.
 """
 from __future__ import annotations
 
@@ -22,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.cluster import LOCAL, RACK, REMOTE, Rates
+from ..core.cluster import LOCAL, RACK, REMOTE, Rates, safe_inv_rates
 from ..core.policies import PodSpec
 from ..kernels import pod_route, queue_update, weighted_argmin
 from .locality import FleetTopology
@@ -42,7 +49,8 @@ class RouterStats:
 class PodRouter:
     def __init__(self, fleet: FleetTopology, rates: Rates,
                  policy: str = "pod", pod: PodSpec = PodSpec(2, 6),
-                 seed: int = 0):
+                 seed: int = 0,
+                 rate_matrix: Optional[np.ndarray] = None):
         assert policy in ("pod", "full")
         self.fleet = fleet
         self.rates = rates
@@ -52,10 +60,20 @@ class PodRouter:
         self.Q = jnp.zeros((self.M, 3), jnp.int32)
         self.W = jnp.zeros((self.M,), jnp.float32)
         self.inv_rates = 1.0 / rates.as_array()
+        if rate_matrix is not None:
+            rm = np.asarray(rate_matrix, np.float32)
+            assert rm.shape == (self.M, 3), rm.shape
+            self.inv_rate_m = safe_inv_rates(jnp.asarray(rm))
+        else:
+            self.inv_rate_m = None
         self.key = jax.random.PRNGKey(seed)
         self.stats = RouterStats()
         R = self.M // fleet.n_pods
         self._pod_of = np.arange(self.M) // R
+
+    @property
+    def heterogeneous(self) -> bool:
+        return self.inv_rate_m is not None
 
     # -- locality classes for a request batch ------------------------------
 
@@ -106,7 +124,9 @@ class PodRouter:
         each request's prefix.  Returns chosen replica ids [B]."""
         B = locals_.shape[0]
         cls = self._classes(locals_)
-        if self.policy == "full":
+        if self.heterogeneous:
+            sel, sel_cls = self._route_hetero(cls, locals_)
+        elif self.policy == "full":
             sel, _ = weighted_argmin(self.W, jnp.asarray(cls), self.inv_rates)
             sel_cls = jnp.asarray(cls)[jnp.arange(B), sel]
             self.stats.probes += B * self.M
@@ -119,15 +139,46 @@ class PodRouter:
                                           axis=1)[:, 0]
             self.stats.probes += B * idx.shape[1]
         self.stats.decisions += B
-        valid_b = jnp.ones((B,), bool)
-        self.Q, self.W = queue_update(self.Q, sel, sel_cls, valid_b,
-                                      self.inv_rates)
+        if self.heterogeneous:
+            self.Q = self.Q.at[sel, sel_cls].add(1)
+            self._refresh_workload()
+        else:
+            valid_b = jnp.ones((B,), bool)
+            self.Q, self.W = queue_update(self.Q, sel, sel_cls, valid_b,
+                                          self.inv_rates)
         np.add.at(self.stats.routed_by_class, np.asarray(sel_cls), 1)
         return np.asarray(sel)
+
+    def _route_hetero(self, cls: np.ndarray, locals_: np.ndarray):
+        """Per-replica-rate scoring (plain JAX; same argmin/tie semantics
+        and probe accounting as the kernel paths)."""
+        from ..core.policies import (route_balanced_pandas_full,
+                                     route_pod_candidates)
+
+        B = cls.shape[0]
+        if self.policy == "full":
+            tie = jax.random.uniform(self._next_key(), (self.M,))
+            sel, sel_cls = route_balanced_pandas_full(
+                self.W, jnp.asarray(cls), self.inv_rate_m, tie)
+            self.stats.probes += B * self.M
+        else:
+            idx, ccls, valid = self._sample_candidates(cls, locals_)
+            sel, sel_cls = route_pod_candidates(
+                self._next_key(), self.W, jnp.asarray(idx),
+                jnp.asarray(ccls), jnp.asarray(valid), self.inv_rate_m)
+            self.stats.probes += B * idx.shape[1]
+        return sel, sel_cls
+
+    def _refresh_workload(self):
+        self.W = (self.Q.astype(jnp.float32) * self.inv_rate_m).sum(-1)
 
     def complete(self, replica_ids: np.ndarray, classes: np.ndarray):
         """Mark requests finished (dequeue bookkeeping)."""
         dec = jnp.zeros((self.M, 3), jnp.int32).at[
             jnp.asarray(replica_ids), jnp.asarray(classes)].add(1)
         self.Q = jnp.maximum(self.Q - dec, 0)
-        self.W = (self.Q.astype(jnp.float32) * self.inv_rates[None, :]).sum(-1)
+        if self.heterogeneous:
+            self._refresh_workload()
+        else:
+            self.W = (self.Q.astype(jnp.float32)
+                      * self.inv_rates[None, :]).sum(-1)

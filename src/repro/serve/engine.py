@@ -133,6 +133,28 @@ class ServeEngine:
     def run(self, until_done: int, max_ticks: int = 100_000) -> EngineStats:
         while len(self.done) < until_done and self.tick < max_ticks:
             self.step()
+        return self._stats()
+
+    def run_arrivals(self, schedule, make_request,
+                     max_ticks: int = 100_000) -> EngineStats:
+        """Replay a scenario-driven arrival trace: ``schedule[i]`` requests
+        are submitted at tick i (e.g. repro.scenarios.arrival_counts for
+        MMPP / diurnal / flash-crowd traffic shapes), then drain.
+
+        make_request(arrival_tick) -> Request (with ``arrival`` set)."""
+        total = int(np.sum(schedule))
+        i = 0
+        while (i < len(schedule) or len(self.done) < total) \
+                and self.tick < max_ticks:
+            if i < len(schedule):
+                n = int(schedule[i])
+                if n:
+                    self.submit([make_request(self.tick) for _ in range(n)])
+                i += 1
+            self.step()
+        return self._stats()
+
+    def _stats(self) -> EngineStats:
         comp = [r.done_tick - r.arrival for r in self.done]
         loc = np.bincount([r.cls for r in self.done], minlength=3)
         probes = (self.router.stats.probes

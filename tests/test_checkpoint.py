@@ -32,17 +32,27 @@ def test_roundtrip_exact(tmp_path):
 def test_integrity_check_detects_corruption(tmp_path):
     tree = _tree(jax.random.PRNGKey(1))
     path = ckpt.save(str(tmp_path), 1, tree)
-    blob = os.path.join(path, "data.msgpack.zst")
-    import zstandard as zstd, msgpack
-    payload = msgpack.unpackb(zstd.ZstdDecompressor().decompress(
-        open(blob, "rb").read()), raw=False)
+    blob = os.path.join(path, ckpt.data_filename(ckpt.DEFAULT_CODEC))
+    import msgpack
+    payload = msgpack.unpackb(ckpt.decompress(open(blob, "rb").read(),
+                                              ckpt.DEFAULT_CODEC), raw=False)
     k = next(iter(payload))
     payload[k] = payload[k][:-1] + bytes([payload[k][-1] ^ 0xFF])
     with open(blob, "wb") as f:
-        f.write(zstd.ZstdCompressor().compress(
-            msgpack.packb(payload, use_bin_type=True)))
+        f.write(ckpt.compress(msgpack.packb(payload, use_bin_type=True)))
     with pytest.raises(IOError, match="integrity"):
         ckpt.restore(str(tmp_path), 1, tree)
+
+
+def test_zlib_codec_roundtrip_and_manifest(tmp_path):
+    """The stdlib fallback codec roundtrips and is recorded in the manifest."""
+    tree = _tree(jax.random.PRNGKey(3))
+    path = ckpt.save(str(tmp_path), 5, tree, codec="zlib")
+    assert os.path.exists(os.path.join(path, "data.msgpack.zlib"))
+    restored, manifest = ckpt.restore(str(tmp_path), 5, tree)
+    assert manifest["codec"] == "zlib"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_gc_keeps_last_n(tmp_path):

@@ -1,0 +1,228 @@
+"""Scenario engine: spec realization, placement skew, per-server rates,
+refsim-vs-JAX agreement on a heterogeneous fleet."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    Rates,
+    SimConfig,
+    inv_rate_matrix,
+    locality_class,
+    route_balanced_pandas_full,
+    simulate,
+)
+from repro.core.refsim import simulate_bp_ref
+from repro.scenarios import (
+    SCENARIOS,
+    FleetSpec,
+    Scenario,
+    TrafficSpec,
+    WindowSpec,
+    arrival_counts,
+    capacity_scale,
+    get_scenario,
+    realize,
+    sample_locals_scenario,
+    speed_at,
+    speed_trace,
+    traffic_shape,
+)
+
+CLUSTER = Cluster(M=24, K=4)
+RATES = Rates(0.05, 0.025, 0.01)
+
+
+def test_registry_has_named_scenarios():
+    assert len(SCENARIOS) >= 5
+    for required in ("uniform", "slow_rack", "straggler_wave",
+                     "diurnal_burst", "zipf_hotspot"):
+        assert required in SCENARIOS
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("no_such_scenario")
+
+
+# ---------------------------------------------------------------------------
+# fleet axis
+# ---------------------------------------------------------------------------
+
+
+def test_speed_windows_compose_and_capacity_is_exact():
+    spec = Scenario(
+        "w", fleet=FleetSpec(rack_speeds=(0.5,), windows=(
+            WindowSpec(t0=0.25, t1=0.75, mult=0.5, rack=0),
+            WindowSpec(t0=0.50, t1=0.75, mult=0.0, rack=1),
+        )))
+    T = 1000
+    scen, lam_cap = realize(spec, CLUSTER, RATES, T)
+    R = CLUSTER.rack_size
+    s0 = np.asarray(speed_at(scen, 0))
+    assert s0[0] == pytest.approx(0.5) and s0[R] == pytest.approx(1.0)
+    s_mid = np.asarray(speed_at(scen, 600))       # both windows active
+    assert s_mid[0] == pytest.approx(0.25)        # 0.5 base * 0.5 window
+    assert s_mid[R] == pytest.approx(0.0)         # rack 1 drained
+    s_end = np.asarray(speed_at(scen, 900))       # recovered
+    assert s_end[0] == pytest.approx(0.5) and s_end[R] == pytest.approx(1.0)
+
+    # capacity_scale integrates the piecewise-constant trace exactly
+    tr = speed_trace(scen, T)                     # [T, M] host oracle
+    assert capacity_scale(scen, T) == pytest.approx(tr.mean(), rel=1e-9)
+    assert lam_cap == pytest.approx(RATES.alpha * CLUSTER.M * tr.mean())
+
+
+def test_uniform_scenario_is_the_seed_model():
+    scen, lam_cap = realize(get_scenario(None), CLUSTER, RATES, 100)
+    assert np.asarray(scen.base_speed).tolist() == [1.0] * CLUSTER.M
+    assert scen.chunk_locals is None
+    np.testing.assert_allclose(np.asarray(scen.lam_shape), 1.0)
+    assert lam_cap == pytest.approx(CLUSTER.M * RATES.alpha)
+
+
+# ---------------------------------------------------------------------------
+# traffic axis
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_shapes_are_mean_one_and_shaped():
+    rng = np.random.default_rng(0)
+    T = 4000
+    for kind in ("stationary", "diurnal", "flash", "mmpp"):
+        shape = traffic_shape(TrafficSpec(kind=kind), T, rng)
+        assert shape.shape == (T,)
+        assert shape.mean() == pytest.approx(1.0, rel=1e-5)
+        assert (shape >= 0).all()
+    flash = traffic_shape(TrafficSpec(kind="flash", t0=0.5, t1=0.6,
+                                      peak=2.5), T, rng)
+    assert flash[int(0.55 * T)] / flash[0] == pytest.approx(2.5, rel=1e-6)
+
+
+def test_arrival_counts_deterministic_and_calibrated():
+    spec = TrafficSpec(kind="mmpp")
+    a = arrival_counts(spec, 5000, mean_per_tick=2.0, seed=7)
+    b = arrival_counts(spec, 5000, mean_per_tick=2.0, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert a.mean() == pytest.approx(2.0, rel=0.15)
+
+
+# ---------------------------------------------------------------------------
+# placement axis
+# ---------------------------------------------------------------------------
+
+
+def test_zipf_placement_distribution_and_determinism():
+    spec = get_scenario("zipf_hotspot")
+    scen, _ = realize(spec, CLUSTER, RATES, 100)
+    scen2, _ = realize(spec, CLUSTER, RATES, 100)
+    # realization is deterministic in the scenario seed
+    np.testing.assert_array_equal(np.asarray(scen.chunk_locals),
+                                  np.asarray(scen2.chunk_locals))
+    np.testing.assert_array_equal(np.asarray(scen.chunk_logits),
+                                  np.asarray(scen2.chunk_logits))
+
+    key = jax.random.PRNGKey(0)
+    loc = np.asarray(sample_locals_scenario(key, CLUSTER, scen, 8000))
+    loc2 = np.asarray(sample_locals_scenario(key, CLUSTER, scen, 8000))
+    np.testing.assert_array_equal(loc, loc2)      # same key -> same draws
+
+    # triples are valid server ids, distinct within a task
+    assert loc.min() >= 0 and loc.max() < CLUSTER.M
+    assert all(len(set(row)) == CLUSTER.n_replicas for row in loc)
+
+    # distribution sanity: triple frequencies follow the Zipf law -> the
+    # hottest triple appears ~p_0 of the time and far more often than under
+    # uniform placement over the chunk catalog
+    triples = [tuple(sorted(r)) for r in loc]
+    top_frac = max(np.unique([hash(t) for t in triples],
+                             return_counts=True)[1]) / len(triples)
+    probs = np.exp(np.asarray(scen.chunk_logits))
+    assert top_frac == pytest.approx(float(probs.max()), rel=0.2)
+    C = probs.shape[0]
+    assert top_frac > 5.0 / C                     # >> uniform 1/C
+
+
+def test_pod_candidates_membership_under_zipf_placement():
+    """masked_draws-backed pod sampling stays class-consistent when the
+    locals come from the skewed placement law."""
+    from repro.core import PodSpec, pod_candidates
+
+    scen, _ = realize(get_scenario("zipf_hotspot"), CLUSTER, RATES, 100)
+    key = jax.random.PRNGKey(3)
+    locals_ = sample_locals_scenario(key, CLUSTER, scen, 64)
+    cls = locality_class(CLUSTER, locals_)
+    ci, cc, cv = pod_candidates(key, CLUSTER, locals_, cls, PodSpec(2, 4))
+    ci, cc, cv = map(np.asarray, (ci, cc, cv))
+    cls_np = np.asarray(cls)
+    for b in range(64):
+        for j in range(ci.shape[1]):
+            if cv[b, j]:
+                assert cls_np[b, ci[b, j]] == cc[b, j]
+
+
+# ---------------------------------------------------------------------------
+# per-server workload metric
+# ---------------------------------------------------------------------------
+
+
+def test_per_server_workload_routing_matches_numpy_oracle():
+    rng = np.random.default_rng(1)
+    M = CLUSTER.M
+    speed = rng.uniform(0.25, 2.0, M).astype(np.float32)
+    inv_m = np.asarray(inv_rate_matrix(RATES, jnp.asarray(speed)))
+    # oracle: 1 / (speed_m * rate_c)
+    want = 1.0 / (speed[:, None] * np.array(
+        [RATES.alpha, RATES.beta, RATES.gamma])[None, :])
+    np.testing.assert_allclose(inv_m, want, rtol=1e-5)
+
+    Q = rng.integers(0, 12, (M, 3))
+    W = (Q * inv_m).sum(axis=1).astype(np.float32)
+    locals_ = sample_locals_scenario(jax.random.PRNGKey(4), CLUSTER,
+                                     realize(get_scenario("uniform"),
+                                             CLUSTER, RATES, 10)[0], 32)
+    cls = locality_class(CLUSTER, locals_)
+    tie = jax.random.uniform(jax.random.PRNGKey(5), (M,))
+    sel, sel_cls = route_balanced_pandas_full(
+        jnp.asarray(W), cls, jnp.asarray(inv_m), tie)
+    sel, sel_cls = np.asarray(sel), np.asarray(sel_cls)
+    cls_np = np.asarray(cls)
+    scores = W[None, :] * inv_m[np.arange(M)[None, :], cls_np]    # [B, M]
+    np.testing.assert_allclose(W[sel] * inv_m[sel, sel_cls],
+                               scores.min(axis=1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# refsim vs JAX on a heterogeneous fleet
+# ---------------------------------------------------------------------------
+
+
+def test_refsim_and_jax_agree_on_heterogeneous_scenario():
+    """Event-accurate numpy oracle vs the vectorized simulator on a
+    slow-rack fleet: mean task count within 5% (acceptance criterion)."""
+    slow = Scenario("slow_rack_test", fleet=FleetSpec(rack_speeds=(0.5,)))
+    speed = np.ones(CLUSTER.M)
+    speed[:CLUSTER.rack_size] = 0.5
+
+    # load 0.55 keeps queue autocorrelation (and so seed-to-seed spread)
+    # small enough that the 5% bar is ~4 sigma for these seed counts
+    T, warmup, load = 16_000, 4_000, 0.55
+    ref = np.mean([simulate_bp_ref(CLUSTER, RATES, load, T=T, warmup=warmup,
+                                   seed=s, speed=speed).mean_tasks_in_system
+                   for s in range(3)])
+    cfg = SimConfig(T=T, warmup=warmup)
+    jaxN = np.mean([float(simulate("balanced_pandas", CLUSTER, RATES, load,
+                                   jax.random.PRNGKey(s), cfg,
+                                   scenario=slow).mean_tasks_in_system)
+                    for s in range(6)])
+    assert abs(jaxN - ref) / ref < 0.05, (jaxN, ref)
+
+
+def test_heterogeneous_simulation_is_stable_at_moderate_load():
+    """JAX-side sanity on slow_rack: BP-Pod is stable at 60% of the
+    (speed-scaled) capacity region and throughput tracks arrivals."""
+    cfg = SimConfig(T=12_000, warmup=4_000)   # slow rack lengthens warmup
+    r = simulate("balanced_pandas_pod", CLUSTER, RATES, 0.6,
+                 jax.random.PRNGKey(0), cfg, scenario="slow_rack")
+    assert np.isfinite(float(r.mean_completion_slots))
+    assert float(r.drift) < 1.6
+    assert abs(float(r.throughput) / float(r.arrival_rate_hat) - 1) < 0.1

@@ -31,6 +31,37 @@ def test_router_full_policy_probes_M():
     assert router.stats.probes == 8 * 32                # O(M)
 
 
+def test_router_heterogeneous_rate_matrix_avoids_slow_replicas():
+    """Per-replica [M, 3] rates: replicas 0-2 run at 1/8 speed, so their
+    workload inflates 8x per queued request and the router spills load to
+    the fast locals far sooner.  Probe accounting is unchanged."""
+    import jax.numpy as jnp
+
+    from repro.core import rate_matrix
+
+    fleet = FleetTopology(n_replicas=32, n_pods=4)
+    rates = service_rates()
+    speed = np.ones(32, np.float32)
+    speed[:3] = 0.125
+    rm = np.asarray(rate_matrix(rates, jnp.asarray(speed)))
+    slow = PodRouter(fleet, rates, policy="pod", rate_matrix=rm, seed=1)
+    base = PodRouter(fleet, rates, policy="pod", seed=1)
+    assert slow.heterogeneous and not base.heterogeneous
+
+    homes = np.array([[0, 1, 2]] * 8)       # all requests home on the slow 3
+    n_slow_s = n_slow_b = 0
+    for _ in range(30):
+        n_slow_s += int(np.isin(slow.route(homes), [0, 1, 2]).sum())
+        n_slow_b += int(np.isin(base.route(homes), [0, 1, 2]).sum())
+    assert n_slow_s < 0.5 * n_slow_b, (n_slow_s, n_slow_b)
+    assert slow.stats.probes == base.stats.probes == 30 * 8 * (3 + 8)
+
+    # full policy with per-replica rates: probes stay O(M)
+    full = PodRouter(fleet, rates, policy="full", rate_matrix=rm)
+    full.route(homes)
+    assert full.stats.probes == 8 * 32
+
+
 def test_straggler_rebalancing():
     bal = ShardBalancer(n_workers=16, n_pods=4, seed=0)
     # worker 3 becomes a straggler (4x slow)
@@ -86,3 +117,35 @@ def test_serve_engine_end_to_end():
     for r in eng.done:
         assert len(r.generated) == 4
         assert all(0 <= t < cfg.padded_vocab for t in r.generated)
+
+
+def test_serve_engine_scenario_arrival_trace():
+    """Scenario-driven load replay: a bursty (MMPP) arrival-count trace is
+    fed through run_arrivals and every request completes."""
+    from repro.configs import get
+    from repro.models import init_params
+    from repro.scenarios import TrafficSpec, arrival_counts
+    from repro.serve import Request, ServeEngine
+
+    cfg = get("llama3_8b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fleet = FleetTopology(n_replicas=8, n_pods=2)
+    router = PodRouter(fleet, service_rates(), policy="pod")
+    rng = np.random.default_rng(0)
+    prefix_homes = {i: rng.choice(8, size=3, replace=False) for i in range(4)}
+    eng = ServeEngine(cfg, params, fleet, router, prefix_homes, max_batch=4)
+
+    schedule = arrival_counts(TrafficSpec(kind="mmpp", burst=4.0,
+                                          p_enter=0.2, p_exit=0.2),
+                              T=10, mean_per_tick=1.0, seed=3)
+    rid = iter(range(10_000))
+
+    def make_request(tick):
+        i = next(rid)
+        return Request(rid=i, prefix_id=i % 4,
+                       prompt=rng.integers(0, cfg.vocab, size=3),
+                       max_new=3, arrival=tick)
+
+    stats = eng.run_arrivals(schedule, make_request, max_ticks=500)
+    assert len(stats.completions) == int(schedule.sum())
+    assert all(c > 0 for c in stats.completions)
