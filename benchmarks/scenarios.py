@@ -11,7 +11,15 @@ sensitivity_d = (mean_T[d=3] - mean_T[d=16]) / mean_T[d=16]
   ~0   -> the scenario is insensitive to the probe budget (paper regime)
   >>0  -> small candidate sets hurt; locality/heterogeneity makes extra
          probes valuable.
+
+One-compile sweep: every scenario is realized against the registry-wide
+canonical pad (scenarios.canonical_pad) with one shared a_max, so the jit'd
+simulator step compiles once per (algo, pod) and the other 8 scenarios ride
+the cache — the per-scenario recompile used to dominate smoke wall-clock.
+``--scenarios=name1,name2`` restricts the sweep (CI runs one natively-padded
+and one natively-max-shaped scenario).
 """
+import sys
 import time
 
 import numpy as np
@@ -19,7 +27,7 @@ import numpy as np
 from common import Preset, preset_from_argv, save_artifact
 
 from repro.core import PodSpec, simulate_grid
-from repro.scenarios import SCENARIOS
+from repro.scenarios import SCENARIOS, canonical_a_max, canonical_pad
 
 ALGOS = ("balanced_pandas", "balanced_pandas_pod", "jsq_maxweight_pod")
 
@@ -28,10 +36,11 @@ ALGOS = ("balanced_pandas", "balanced_pandas_pod", "jsq_maxweight_pod")
 D_SWEEP = (PodSpec(1, 2), PodSpec(2, 6), PodSpec(4, 12))
 
 
-def _mean_T(preset: Preset, algo: str, name: str, pod=None) -> dict:
+def _mean_T(preset: Preset, algo: str, name: str, pod=None,
+            pad=None, a_max=None) -> dict:
     res = simulate_grid(algo, preset.cluster, preset.rates,
                         [preset.fixed_load], preset.n_seeds, preset.cfg,
-                        pod=pod, scenario=name)
+                        pod=pod, scenario=name, pad=pad, a_max=a_max)
     t = np.asarray(res.mean_completion_norm)       # [seeds, 1]
     return {
         "mean": float(np.nanmean(t)),
@@ -41,19 +50,38 @@ def _mean_T(preset: Preset, algo: str, name: str, pod=None) -> dict:
     }
 
 
+def _selected_scenarios() -> dict:
+    only = [a.split("=", 1)[1] for a in sys.argv[1:]
+            if a.startswith("--scenarios=")]
+    if not only:
+        return dict(SCENARIOS)
+    wanted = [n for o in only for n in o.split(",") if n]
+    unknown = set(wanted) - set(SCENARIOS)
+    if unknown:
+        raise SystemExit(f"--scenarios: unknown {sorted(unknown)}; "
+                         f"registered: {sorted(SCENARIOS)}")
+    return {n: SCENARIOS[n] for n in wanted}
+
+
 def main(preset=None):
     p = preset or preset_from_argv()
+    # canonical padding over the FULL registry (not just the selection):
+    # any filtered run shares the same compiled signature as the full sweep.
+    pad = canonical_pad(p.cluster)
+    a_max = canonical_a_max(p.cluster, p.rates, p.cfg, p.fixed_load)
     rows = {}
-    for name, scen in SCENARIOS.items():
+    for name, scen in _selected_scenarios().items():
         t0 = time.time()
         row = {"description": scen.description, "algos": {}}
-        d_means = {pod.d: _mean_T(p, "balanced_pandas_pod", name, pod=pod)
+        d_means = {pod.d: _mean_T(p, "balanced_pandas_pod", name, pod=pod,
+                                  pad=pad, a_max=a_max)
                    for pod in D_SWEEP}
         for algo in ALGOS:
             # the d=8 sweep cell IS BP-Pod at its default PodSpec(2, 6)
             # with the same seeds — reuse instead of re-simulating
             row["algos"][algo] = (d_means[8] if algo == "balanced_pandas_pod"
-                                  else _mean_T(p, algo, name))
+                                  else _mean_T(p, algo, name,
+                                               pad=pad, a_max=a_max))
         d_small, d_large = min(d_means), max(d_means)
         row["d_sweep"] = {str(d): m for d, m in d_means.items()}
         row["sensitivity_d"] = (

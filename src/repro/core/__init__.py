@@ -39,8 +39,10 @@ from .simulator import (
     SimConfig,
     SimResult,
     SQState,
+    reset_trace_count,
     simulate,
     simulate_grid,
+    trace_count,
 )
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -39,6 +39,11 @@ completes speed_t[m] units per slot, so a straggler slows its in-flight task
 and a drained server (speed 0) freezes and starts nothing.  The BP workload
 metric divides each sub-queue by the server's own current [M, 3] rates.
 The default `uniform` scenario reproduces the symmetric model exactly.
+For sweeps, ``simulate(..., pad=scenarios.canonical_pad(cluster),
+a_max=scenarios.canonical_a_max(...))`` realizes every scenario to one
+canonical pytree signature so the jit'd step compiles exactly once for the
+whole registry (``trace_count`` instruments this; a regression test in
+tests/test_scenarios.py guards it).
 
 Scheduling is batched per slot: all idle servers act against the same
 snapshot, with steal conflicts resolved by weight priority and queue-length
@@ -569,11 +574,31 @@ def _pod_for(algo: str, pod: Optional[PodSpec]) -> Optional[PodSpec]:
     return None
 
 
+# -- jit trace-count instrumentation ----------------------------------------
+# The body of a jit'd function executes (as Python) exactly once per compiled
+# signature, so a plain counter bumped inside `_run` counts cache misses.
+# The one-compile scenario sweep (canonical ScenarioData padding + shared
+# a_max) is guarded by a regression test asserting this stays at 1 across
+# the whole registry (tests/test_scenarios.py).
+
+_TRACE_COUNTS: dict = {"_run": 0}
+
+
+def trace_count() -> int:
+    """Number of times the jit'd simulator step has been (re)traced."""
+    return _TRACE_COUNTS["_run"]
+
+
+def reset_trace_count() -> None:
+    _TRACE_COUNTS["_run"] = 0
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("algo", "cluster", "rates", "cfg", "pod", "a_max"))
 def _run(key, lam, scen: ScenarioData, *, algo: str, cluster: Cluster,
          rates: Rates, cfg: SimConfig, pod: Optional[PodSpec], a_max: int):
+    _TRACE_COUNTS["_run"] += 1        # executes only on a jit cache miss
     half2_from = cfg.warmup + (cfg.T - cfg.warmup) // 2
 
     def step(carry, t):
@@ -615,17 +640,24 @@ def _run(key, lam, scen: ScenarioData, *, algo: str, cluster: Cluster,
 
 def simulate(algo: str, cluster: Cluster, rates: Rates, load: float,
              key: jax.Array, cfg: SimConfig = SimConfig(),
-             pod: Optional[PodSpec] = None, scenario=None) -> SimResult:
+             pod: Optional[PodSpec] = None, scenario=None,
+             pad=None, a_max: Optional[int] = None) -> SimResult:
     """Run one simulation and return derived metrics.
 
     load: fraction of the (scenario-aware, time-averaged) capacity boundary;
     for the default `uniform` scenario that is lambda = load * M * alpha.
     scenario: a registered scenario name, a scenarios.Scenario, or None.
+    pad / a_max: canonical sweep controls (scenarios.canonical_pad /
+    scenarios.canonical_a_max) — realizing every scenario with the same pad
+    and sharing one a_max keeps the whole sweep on a single compiled
+    signature (see trace_count).
     """
-    scen, lam_cap = realize(get_scenario(scenario), cluster, rates, cfg.T)
+    scen, lam_cap = realize(get_scenario(scenario), cluster, rates, cfg.T,
+                            pad=pad)
     lam = float(load) * lam_cap
     pod = _pod_for(algo, pod)
-    a_max = cfg.resolve_a_max(lam * float(jnp.max(scen.lam_shape)))
+    if a_max is None:
+        a_max = cfg.resolve_a_max(lam * float(jnp.max(scen.lam_shape)))
     sums = _run(key, jnp.float32(lam), scen, algo=algo, cluster=cluster,
                 rates=rates, cfg=cfg, pod=pod, a_max=a_max)
     return summarize(sums, algo, cluster, rates, pod)
@@ -634,15 +666,19 @@ def simulate(algo: str, cluster: Cluster, rates: Rates, load: float,
 def simulate_grid(algo: str, cluster: Cluster, rates: Rates, loads,
                   n_seeds: int, cfg: SimConfig = SimConfig(),
                   pod: Optional[PodSpec] = None, seed0: int = 0,
-                  scenario=None) -> SimResult:
+                  scenario=None, pad=None,
+                  a_max: Optional[int] = None) -> SimResult:
     """Vectorized sweep: one compile, vmapped over loads x seeds.
-    Returns SimResult with leading dims [n_seeds, n_loads]."""
+    Returns SimResult with leading dims [n_seeds, n_loads].
+    pad / a_max as in ``simulate``."""
     import numpy as _np
-    scen, lam_cap = realize(get_scenario(scenario), cluster, rates, cfg.T)
+    scen, lam_cap = realize(get_scenario(scenario), cluster, rates, cfg.T,
+                            pad=pad)
     lam = jnp.array([l * lam_cap for l in loads], jnp.float32)
     pod = _pod_for(algo, pod)
-    a_max = cfg.resolve_a_max(float(_np.max(_np.asarray(lam)))
-                              * float(jnp.max(scen.lam_shape)))
+    if a_max is None:
+        a_max = cfg.resolve_a_max(float(_np.max(_np.asarray(lam)))
+                                  * float(jnp.max(scen.lam_shape)))
     keys = jax.random.split(jax.random.PRNGKey(seed0), n_seeds)
 
     def one(key, l):

@@ -4,6 +4,11 @@ weighted_argmin — O(M) Balanced-Pandas routing scan (the baseline the paper
                   improves on); pod_route — O(d) power-of-d routing;
 queue_update    — fused scatter + workload recompute.  ref.py holds the
 pure-jnp oracles; ops.py the jit'd wrappers (interpret=True off-TPU).
+
+All three kernels take their inverse-rate operand as either the homogeneous
+``[3]`` vector or a per-server ``[M, 3]`` matrix (heterogeneous fleets);
+zero-rate servers carry ``+inf`` inverse rates and are masked to ``+inf``
+scores after the multiply (invrates.py documents the finite encoding).
 """
 from . import ref
 from .ops import pod_route, queue_update, weighted_argmin

@@ -12,6 +12,20 @@ gather, which lands on the MXU instead of requiring scatter/gather support —
 and the argmin over the C candidate slots stays on the VPU.  The full W
 vector is resident in VMEM (M <= ~64k fits comfortably); the grid tiles the
 task batch.
+
+Heterogeneous-rate contract (``inv_rates``: [3] or [M, 3])
+----------------------------------------------------------
+The inverse-rate operand is either the homogeneous [3] vector or a
+per-server [M, 3] matrix.  The per-candidate rate gather
+inv_rates[cand_idx[b, c], cand_cls[b, c]] reuses the SAME one-hot matmul
+already built for the workload gather: the wrapper encodes the matrix
+(invrates.encode) as [Mp, 8] — cols 0..2 finite reciprocal rates, cols 4..6
+dead flags for zero-rate (reciprocal ``+inf``) entries — one_hot @ enc
+gathers all eight lanes at once, and the class column is selected on the
+VPU.  score(b, c) = W[cand] * inv_rates[cand, cls] when that entry is
+finite, else ``+inf``; the dead mask lands AFTER the multiply (same guard
+as pad/invalid slots) so a zero-workload dead candidate scores ``+inf``
+rather than ``0 * inf = NaN``.  Oracle: ref.pod_route_ref.
 """
 from __future__ import annotations
 
@@ -21,17 +35,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .invrates import FLAG_BASE, WIDTH, encode
+
 LANE = 128
 
 
-def _kernel(w_ref, idx_ref, cls_ref, valid_ref, invr_ref, sel_ref, val_ref,
+def _kernel(w_ref, idx_ref, cls_ref, valid_ref, invm_ref, sel_ref, val_ref,
              *, m_pad: int, c_pad: int, b_tile: int):
     w = w_ref[...].astype(jnp.float32)            # [1, Mp]
     cand = idx_ref[...]                            # [b, C]
     cls = cls_ref[...]                             # [b, C]
     valid = valid_ref[...]                         # [b, C] (int32 0/1)
+    invm = invm_ref[...]                           # [Mp, 8] (see invrates)
 
-    # gather-as-matmul: one_hot([b*C, Mp]) @ W[Mp] -> scores per candidate.
+    # gather-as-matmul: one_hot([b*C, Mp]) @ W[Mp] -> scores per candidate,
+    # and the same one-hot gathers the candidate's inverse-rate lanes.
     flat = cand.reshape(b_tile * c_pad, 1)
     iota = jax.lax.broadcasted_iota(jnp.int32, (b_tile * c_pad, m_pad), 1)
     onehot = (iota == flat).astype(jnp.float32)
@@ -39,12 +57,19 @@ def _kernel(w_ref, idx_ref, cls_ref, valid_ref, invr_ref, sel_ref, val_ref,
                              (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     wc = wc.reshape(b_tile, c_pad)
+    irc = jax.lax.dot_general(onehot, invm,
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [b*C, 8]
 
-    ir0 = invr_ref[0, 0]
-    ir1 = invr_ref[0, 1]
-    ir2 = invr_ref[0, 2]
-    factor = jnp.where(cls == 0, ir0, jnp.where(cls == 1, ir1, ir2))
-    scores = jnp.where((valid > 0) & (cls < 3), wc * factor, jnp.inf)  # [b, C]
+    def col(k):
+        return irc[:, k].reshape(b_tile, c_pad)
+
+    factor = jnp.where(cls == 0, col(0), jnp.where(cls == 1, col(1), col(2)))
+    dead = jnp.where(cls == 0, col(FLAG_BASE),
+                     jnp.where(cls == 1, col(FLAG_BASE + 1),
+                               col(FLAG_BASE + 2)))
+    scores = jnp.where((valid > 0) & (cls < 3) & (dead == 0.0),
+                       wc * factor, jnp.inf)       # [b, C]
 
     c_star = jnp.argmin(scores, axis=1).astype(jnp.int32)  # first-slot ties
     # select cand_idx[b, c*] without a gather: one-hot dot over the C axis.
@@ -58,7 +83,9 @@ def _kernel(w_ref, idx_ref, cls_ref, valid_ref, invr_ref, sel_ref, val_ref,
 def pod_route(W: jnp.ndarray, cand_idx: jnp.ndarray, cand_cls: jnp.ndarray,
               valid: jnp.ndarray, inv_rates: jnp.ndarray, *,
               b_tile: int = 8, interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """See ref.pod_route_ref.  W: [M]; cand_idx/cand_cls: [B, C]; valid: [B, C].
+    """See ref.pod_route_ref.  W: [M]; cand_idx/cand_cls: [B, C]; valid: [B, C];
+    inv_rates: [3] homogeneous or [M, 3] per-server (entries may be +inf for
+    zero-rate servers — masked to +inf scores, never NaN).
 
     Pads C to a multiple of 8 lanes-worth and B to b_tile.  VMEM per step
     ~= b_tile*C*M*4 bytes for the one-hot (b_tile=8, C=16, M=8192 -> 4 MiB).
@@ -76,7 +103,7 @@ def pod_route(W: jnp.ndarray, cand_idx: jnp.ndarray, cand_cls: jnp.ndarray,
     idx_p = pad2(cand_idx, 0)
     cls_p = pad2(cand_cls, 3)
     valid_p = pad2(valid.astype(jnp.int32), 0)
-    invr = jnp.pad(inv_rates.astype(jnp.float32), (0, 1))[None, :]
+    invm = jnp.pad(encode(inv_rates, M), ((0, Mp - M), (0, 0)))  # [Mp, 8]
 
     sel, val = pl.pallas_call(
         functools.partial(_kernel, m_pad=Mp, c_pad=Cp, b_tile=b_tile),
@@ -86,7 +113,7 @@ def pod_route(W: jnp.ndarray, cand_idx: jnp.ndarray, cand_cls: jnp.ndarray,
             pl.BlockSpec((b_tile, Cp), lambda i: (i, 0)),
             pl.BlockSpec((b_tile, Cp), lambda i: (i, 0)),
             pl.BlockSpec((b_tile, Cp), lambda i: (i, 0)),
-            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+            pl.BlockSpec((Mp, WIDTH), lambda i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((b_tile,), lambda i: (i,)),
@@ -97,5 +124,5 @@ def pod_route(W: jnp.ndarray, cand_idx: jnp.ndarray, cand_cls: jnp.ndarray,
             jax.ShapeDtypeStruct((Bp,), jnp.float32),
         ],
         interpret=interpret,
-    )(W_p, idx_p, cls_p, valid_p, invr)
+    )(W_p, idx_p, cls_p, valid_p, invm)
     return sel[:B], val[:B]

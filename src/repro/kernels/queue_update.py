@@ -10,6 +10,14 @@ recompute into the same VMEM residency (Q is read and written once).
 
 Grid tiles the server axis; the whole routing batch is VMEM-resident per
 step (B*m_tile one-hot ~= 1024*512*4 = 2 MiB).
+
+Heterogeneous-rate contract (``inv_rates``: [3] or [M, 3]): the workload
+refresh uses each server's own row, W_m = sum_c Q[m, c] * inv_rates[m, c].
+The wrapper encodes the operand (invrates.encode, flags=False) as a
+per-server [Mp, 8] block whose cols 0..2 are the finite reciprocal rates;
+non-finite (zero-rate / drained) entries contribute 0 to W — safe because
+the routing kernels mask dead servers by their own dead flags, never by W.
+Oracle: ref.queue_update_ref.
 """
 from __future__ import annotations
 
@@ -18,6 +26,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .invrates import WIDTH, encode
 
 LANE = 128
 
@@ -44,7 +54,7 @@ def _kernel(q_ref, sel_ref, cls_ref, valid_ref, invr_ref, qout_ref, w_ref,
     q_new = q + dq
     qout_ref[...] = q_new.astype(jnp.int32)
 
-    ir = invr_ref[...]                              # [1, 8] (3 used, rest 0)
+    ir = invr_ref[...]                              # [m_tile, 8] (3 used, rest 0)
     w_ref[...] = jnp.sum(q_new * ir, axis=1, keepdims=True)  # [m_tile, 1]
 
 
@@ -53,7 +63,9 @@ def queue_update(Q: jnp.ndarray, sel: jnp.ndarray, sel_cls: jnp.ndarray,
                  valid: jnp.ndarray, inv_rates: jnp.ndarray, *,
                  m_tile: int = 4 * LANE, interpret: bool = True
                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """See ref.queue_update_ref.  Q: [M, 3] int32; sel/sel_cls/valid: [B]."""
+    """See ref.queue_update_ref.  Q: [M, 3] int32; sel/sel_cls/valid: [B];
+    inv_rates: [3] homogeneous or [M, 3] per-server (non-finite entries
+    contribute 0 to W)."""
     M, three = Q.shape
     assert three == 3
     (B,) = sel.shape
@@ -66,7 +78,8 @@ def queue_update(Q: jnp.ndarray, sel: jnp.ndarray, sel_cls: jnp.ndarray,
     sel_p = pad1(sel, M)          # padded tasks point past every tile
     cls_p = pad1(sel_cls, 3)
     valid_p = pad1(valid.astype(jnp.int32), 0)
-    invr = jnp.pad(inv_rates.astype(jnp.float32), (0, 5))[None, :]  # [1, 8]
+    invr = jnp.pad(encode(inv_rates, M, flags=False),
+                   ((0, Mp - M), (0, 0)))                          # [Mp, 8]
 
     q_new, W = pl.pallas_call(
         functools.partial(_kernel, m_tile=m_tile, b_pad=Bp),
@@ -76,7 +89,7 @@ def queue_update(Q: jnp.ndarray, sel: jnp.ndarray, sel_cls: jnp.ndarray,
             pl.BlockSpec((1, Bp), lambda j: (0, 0)),
             pl.BlockSpec((1, Bp), lambda j: (0, 0)),
             pl.BlockSpec((1, Bp), lambda j: (0, 0)),
-            pl.BlockSpec((1, 8), lambda j: (0, 0)),
+            pl.BlockSpec((m_tile, WIDTH), lambda j: (j, 0)),
         ],
         out_specs=[
             pl.BlockSpec((m_tile, 8), lambda j: (j, 0)),

@@ -3,10 +3,36 @@
 These define the exact semantics the Pallas kernels must reproduce
 (tests/test_kernels.py sweeps shapes & dtypes and asserts allclose / exact
 index equality).  Tie-breaking contract everywhere: lowest index wins.
+
+Inverse-rate operand (all three oracles): either the homogeneous ``[3]``
+vector (every server identical) or a per-server ``[M, 3]`` matrix
+(heterogeneous fleets).  A zero-rate (drained / failed) server has
+reciprocal rate ``+inf``; the routing oracles mask such entries to a
+``+inf`` score AFTER the multiply — so a zero workload on a dead server
+scores ``+inf``, never ``0 * inf = NaN`` — and queue_update counts them as
+contributing 0 workload (routing never consults a dead server's W).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+
+def _rate_factor(inv_rates: jnp.ndarray, idx: jnp.ndarray,
+                 cls: jnp.ndarray) -> jnp.ndarray:
+    """inv_rates[idx, cls] for the [M, 3] form, inv_rates[cls] for [3].
+    idx/cls broadcast together."""
+    inv = jnp.asarray(inv_rates, jnp.float32)
+    if inv.ndim == 1:
+        return inv[cls]
+    return inv[idx, cls]
+
+
+def _guarded_scores(w: jnp.ndarray, factor: jnp.ndarray,
+                    valid: jnp.ndarray) -> jnp.ndarray:
+    """w * factor with invalid slots and non-finite factors -> +inf (the
+    dead-server mask lands after the multiply: no 0 * inf NaNs)."""
+    return jnp.where(valid & jnp.isfinite(factor),
+                     w.astype(jnp.float32) * factor, jnp.inf)
 
 
 def weighted_argmin_ref(W: jnp.ndarray, cls: jnp.ndarray,
@@ -14,11 +40,14 @@ def weighted_argmin_ref(W: jnp.ndarray, cls: jnp.ndarray,
     """Balanced-Pandas O(M) routing: full argmin of weighted workload.
 
     W: [M] workloads; cls: [B, M] int32 locality classes (0/1/2);
-    inv_rates: [3] = 1/(alpha,beta,gamma).
-    Returns (sel [B] int32, val [B] float32): argmin_m W[m]*inv_rates[cls[b,m]]
-    (first index on ties) and the winning score.
+    inv_rates: [3] = 1/(alpha,beta,gamma), or [M, 3] per-server.
+    Returns (sel [B] int32, val [B] float32): argmin_m W[m]*inv_rates[m,cls]
+    (first index on ties; zero-rate entries score +inf) and the winning
+    score.
     """
-    scores = W[None, :].astype(jnp.float32) * inv_rates.astype(jnp.float32)[cls]
+    m = jnp.arange(cls.shape[-1], dtype=jnp.int32)[None, :]
+    factor = _rate_factor(inv_rates, m, cls)                 # [B, M]
+    scores = _guarded_scores(W[None, :], factor, jnp.ones(cls.shape, bool))
     sel = jnp.argmin(scores, axis=1).astype(jnp.int32)
     val = jnp.min(scores, axis=1)
     return sel, val
@@ -29,13 +58,14 @@ def pod_route_ref(W: jnp.ndarray, cand_idx: jnp.ndarray, cand_cls: jnp.ndarray,
     """Balanced-Pandas-Pod O(d) routing: argmin over an explicit candidate list.
 
     W: [M]; cand_idx/cand_cls: [B, C] int32; valid: [B, C] bool;
-    inv_rates: [3].  Returns (sel [B] int32 server index, val [B] score).
-    Invalid candidate slots never win (score +inf); ties -> lowest slot c,
+    inv_rates: [3] or [M, 3].  Returns (sel [B] int32 server index,
+    val [B] score).  Invalid candidate slots and zero-rate (non-finite
+    inverse-rate) candidates never win (score +inf); ties -> lowest slot c,
     and the returned server is cand_idx[b, c*].
     """
     w = W.astype(jnp.float32)[cand_idx]                      # [B, C]
-    scores = w * inv_rates.astype(jnp.float32)[cand_cls]
-    scores = jnp.where(valid, scores, jnp.inf)
+    factor = _rate_factor(inv_rates, cand_idx, cand_cls)
+    scores = _guarded_scores(w, factor, valid)
     c = jnp.argmin(scores, axis=1)
     sel = jnp.take_along_axis(cand_idx, c[:, None], axis=1)[:, 0].astype(jnp.int32)
     val = jnp.min(scores, axis=1)
@@ -47,11 +77,17 @@ def queue_update_ref(Q: jnp.ndarray, sel: jnp.ndarray, sel_cls: jnp.ndarray,
     """Fused post-routing queue scatter + workload recompute.
 
     Q: [M, 3] int32 sub-queue lengths; sel/sel_cls: [B] int32; valid: [B] bool.
-    Returns (Q_new [M,3] int32, W [M] float32) where
-    Q_new = Q + scatter_add(one_hot(sel) x one_hot(sel_cls) * valid) and
-    W = Q_new @ inv_rates (paper's W_m = Q^l/a + Q^k/b + Q^r/g).
+    inv_rates: [3] or [M, 3].  Returns (Q_new [M,3] int32, W [M] float32)
+    where Q_new = Q + scatter_add(one_hot(sel) x one_hot(sel_cls) * valid)
+    and W = (Q_new * inv_rates).sum(-1) (paper's W_m = Q^l/a + Q^k/b + Q^r/g,
+    with each server's own rates in the [M, 3] form; non-finite entries
+    contribute 0).
     """
     upd = jnp.zeros_like(Q).at[sel, sel_cls].add(valid.astype(Q.dtype))
     Q_new = Q + upd
-    W = (Q_new.astype(jnp.float32) * inv_rates.astype(jnp.float32)[None, :]).sum(-1)
+    inv = jnp.asarray(inv_rates, jnp.float32)
+    if inv.ndim == 1:
+        inv = inv[None, :]
+    inv = jnp.where(jnp.isfinite(inv), inv, 0.0)
+    W = (Q_new.astype(jnp.float32) * inv).sum(-1)
     return Q_new, W

@@ -13,6 +13,18 @@ TPU mapping notes (DESIGN.md §2): scores are formed on the VPU
 accumulator lives in the output block, which maps to the same block for every
 M-step of the grid (sequential TPU grid => safe accumulation).  Tie-break:
 lowest server index (block order + first-index argmin within a block).
+
+Heterogeneous-rate contract (``inv_rates``: [3] or [M, 3])
+----------------------------------------------------------
+The inverse-rate operand is either the homogeneous [3] vector or a
+per-server [M, 3] matrix; both ride the same kernel — the wrapper encodes
+them (invrates.encode) as a lane-transposed [8, Mp] block whose rows 0..2
+hold finite reciprocal rates per server and rows 4..6 hold dead flags for
+zero-rate (reciprocal ``+inf``) entries.  score(b, m) =
+W[m] * inv_rates[m, cls[b, m]] when that entry is finite, else ``+inf``:
+the dead mask is applied AFTER the multiply, exactly like the pad-lane
+guard, so a zero-workload dead server scores ``+inf`` rather than
+``0 * inf = NaN``.  Oracle: ref.weighted_argmin_ref.
 """
 from __future__ import annotations
 
@@ -21,6 +33,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .invrates import FLAG_BASE, WIDTH, encode
 
 LANE = 128
 SUB = 8
@@ -31,14 +45,18 @@ def _kernel(w_ref, cls_ref, invr_ref, val_ref, idx_ref, *, m_tile: int):
 
     w = w_ref[...].astype(jnp.float32)          # [1, m_tile]
     cls = cls_ref[...]                          # [b_tile, m_tile] int32
-    ir0 = invr_ref[0, 0]
-    ir1 = invr_ref[0, 1]
-    ir2 = invr_ref[0, 2]
-    # class -> 1/rate via selects (avoids an in-kernel gather; cls in {0,1,2});
-    # padded lanes carry cls=3 and are masked to +inf AFTER the multiply so a
-    # zero-workload pad lane cannot produce 0*inf = NaN.
-    factor = jnp.where(cls == 0, ir0, jnp.where(cls == 1, ir1, ir2))
-    scores = jnp.where(cls < 3, w * factor, jnp.inf)   # [b_tile, m_tile]
+    ir = invr_ref[...]                          # [8, m_tile] f32 (see invrates)
+    # class -> per-server 1/rate via selects (avoids an in-kernel gather;
+    # cls in {0,1,2}); rows 0..2 are the finite rates, rows 4..6 the dead
+    # flags.  Padded lanes carry cls=3 and dead entries carry flag=1; both
+    # are masked to +inf AFTER the multiply so a zero-workload lane cannot
+    # produce 0*inf = NaN.
+    factor = jnp.where(cls == 0, ir[0:1, :],
+                       jnp.where(cls == 1, ir[1:2, :], ir[2:3, :]))
+    dead = jnp.where(cls == 0, ir[FLAG_BASE:FLAG_BASE + 1, :],
+                     jnp.where(cls == 1, ir[FLAG_BASE + 1:FLAG_BASE + 2, :],
+                               ir[FLAG_BASE + 2:FLAG_BASE + 3, :]))
+    scores = jnp.where((cls < 3) & (dead == 0.0), w * factor, jnp.inf)
 
     local_val = jnp.min(scores, axis=1)
     local_arg = jnp.argmin(scores, axis=1).astype(jnp.int32) + j * m_tile
@@ -57,7 +75,9 @@ def _kernel(w_ref, cls_ref, invr_ref, val_ref, idx_ref, *, m_tile: int):
 def weighted_argmin(W: jnp.ndarray, cls: jnp.ndarray, inv_rates: jnp.ndarray,
                     *, b_tile: int = SUB, m_tile: int = 4 * LANE,
                     interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """See ref.weighted_argmin_ref.  W: [M]; cls: [B, M] int32; inv_rates: [3].
+    """See ref.weighted_argmin_ref.  W: [M]; cls: [B, M] int32;
+    inv_rates: [3] homogeneous or [M, 3] per-server (entries may be +inf
+    for zero-rate servers — masked to +inf scores, never NaN).
 
     Pads B up to b_tile and M up to m_tile (padded servers get class 3 =>
     +inf score; padded tasks are sliced off), then launches a
@@ -69,7 +89,7 @@ def weighted_argmin(W: jnp.ndarray, cls: jnp.ndarray, inv_rates: jnp.ndarray,
     W_p = jnp.pad(W.astype(jnp.float32), (0, Mp - M))[None, :]     # [1, Mp]
     cls_p = jnp.pad(cls.astype(jnp.int32), ((0, Bp - B), (0, Mp - M)),
                     constant_values=3)
-    invr = jnp.pad(inv_rates.astype(jnp.float32), (0, 1))[None, :]  # [1, 4]
+    invr = jnp.pad(encode(inv_rates, M), ((0, Mp - M), (0, 0))).T  # [8, Mp]
 
     grid = (Bp // b_tile, Mp // m_tile)
     val, idx = pl.pallas_call(
@@ -78,7 +98,7 @@ def weighted_argmin(W: jnp.ndarray, cls: jnp.ndarray, inv_rates: jnp.ndarray,
         in_specs=[
             pl.BlockSpec((1, m_tile), lambda i, j: (0, j)),
             pl.BlockSpec((b_tile, m_tile), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 4), lambda i, j: (0, 0)),
+            pl.BlockSpec((WIDTH, m_tile), lambda i, j: (0, j)),
         ],
         out_specs=[
             pl.BlockSpec((b_tile,), lambda i, j: (i,)),

@@ -63,11 +63,15 @@ from .spec import (
     WindowSpec,
     get_scenario,
     register,
+    registry_limits,
     scenario_names,
 )
 from .build import (
     ScenarioData,
+    ScenarioPad,
     arrival_counts,
+    canonical_a_max,
+    canonical_pad,
     capacity_scale,
     realize,
     sample_locals_scenario,

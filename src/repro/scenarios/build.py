@@ -8,7 +8,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .spec import FleetSpec, PlacementSpec, Scenario, TrafficSpec, WindowSpec
+from .spec import (
+    SCENARIOS,
+    FleetSpec,
+    PlacementSpec,
+    Scenario,
+    TrafficSpec,
+    WindowSpec,
+    get_scenario,
+    registry_limits,
+)
 
 if TYPE_CHECKING:  # runtime import would cycle: core.simulator imports us
     from ..core.cluster import Cluster, Rates
@@ -23,6 +32,13 @@ class ScenarioData(NamedTuple):
     win_mult      [E, M] per-window speed multiplier (1.0 = unaffected)
     chunk_logits  [C]  log chunk popularity, or None for uniform placement
     chunk_locals  [C, n_replicas] each chunk's replica triple, or None
+    placement_on  scalar 0/1 selector, or None.  Canonical (padded)
+                  realizations always carry the chunk arrays and choose the
+                  placement law by DATA instead of pytree structure:
+                  1.0 -> draw from the chunk catalog, 0.0 -> uniform
+                  sample_locals.  That keeps every scenario on one compiled
+                  signature (the one-compile sweep).  None preserves the
+                  unpadded behavior, where structure picks the law.
     """
 
     lam_shape: jnp.ndarray
@@ -32,10 +48,54 @@ class ScenarioData(NamedTuple):
     win_mult: jnp.ndarray
     chunk_logits: Optional[jnp.ndarray]
     chunk_locals: Optional[jnp.ndarray]
+    placement_on: Optional[jnp.ndarray] = None
 
     @property
     def M(self) -> int:
         return self.base_speed.shape[0]
+
+
+class ScenarioPad(NamedTuple):
+    """Canonical array shapes every realized scenario is padded to.
+
+    n_windows: event-window slots (inactive pads: start == end == 0,
+    mult == 1).  n_chunks: placement-catalog rows (pads get ~ -inf logits,
+    so they are never drawn).  Realizing every scenario of a sweep with the
+    same ScenarioPad makes all ScenarioData pytrees share one structure and
+    one set of leaf shapes — the jit'd simulator then traces exactly once
+    for the whole sweep.
+    """
+
+    n_windows: int
+    n_chunks: int
+
+
+def canonical_pad(cluster: "Cluster", scenarios=None) -> ScenarioPad:
+    """The registry-wide ScenarioPad (or for an explicit scenario subset)."""
+    n_windows, chunks_per_server = registry_limits(scenarios)
+    return ScenarioPad(n_windows=max(n_windows, 1),
+                       n_chunks=max(chunks_per_server * cluster.M, 1))
+
+
+def canonical_a_max(cluster: "Cluster", rates: "Rates", cfg, load: float,
+                    scenarios=None) -> int:
+    """One arrival-batch width valid for every scenario in the sweep.
+
+    ``a_max`` is a static jit argument of the simulator, so a per-scenario
+    value (peak intensity x scenario capacity) would force one recompile per
+    scenario even with canonical array padding.  This resolves the maximum
+    over the registry (or an explicit subset); cfg is any object with ``T``
+    and ``resolve_a_max`` (i.e. a core.SimConfig — duck-typed to avoid an
+    import cycle).
+    """
+    specs = tuple(scenarios) if scenarios is not None else tuple(
+        SCENARIOS.values())
+    a_max = 1
+    for s in specs:
+        scen, lam_cap = realize(get_scenario(s), cluster, rates, cfg.T)
+        peak = float(load) * lam_cap * float(np.max(np.asarray(scen.lam_shape)))
+        a_max = max(a_max, cfg.resolve_a_max(peak))
+    return a_max
 
 
 def speed_at(scen: ScenarioData, t) -> jnp.ndarray:
@@ -187,13 +247,22 @@ def sample_locals_scenario(key: jax.Array, cluster: "Cluster",
     """Replica triples for ``batch`` tasks under the scenario's placement.
 
     Uniform placement defers to core.cluster.sample_locals; Zipf placement
-    draws a chunk from the popularity law and returns its fixed triple."""
+    draws a chunk from the popularity law and returns its fixed triple.
+    Canonical (padded) realizations carry ``placement_on`` and select
+    between the two laws by data — both draws are computed and a scalar
+    jnp.where picks one, so uniform and skewed scenarios share one trace."""
     from ..core.cluster import sample_locals
 
     if scen.chunk_locals is None:
         return sample_locals(key, cluster, batch)
-    cidx = jax.random.categorical(key, scen.chunk_logits, shape=(batch,))
-    return scen.chunk_locals[cidx]
+    if scen.placement_on is None:
+        cidx = jax.random.categorical(key, scen.chunk_logits, shape=(batch,))
+        return scen.chunk_locals[cidx]
+    k_cat, k_uni = jax.random.split(key)
+    cidx = jax.random.categorical(k_cat, scen.chunk_logits, shape=(batch,))
+    skewed = scen.chunk_locals[cidx]
+    uniform = sample_locals(k_uni, cluster, batch)
+    return jnp.where(scen.placement_on > 0, skewed, uniform)
 
 
 # ---------------------------------------------------------------------------
@@ -201,15 +270,64 @@ def sample_locals_scenario(key: jax.Array, cluster: "Cluster",
 # ---------------------------------------------------------------------------
 
 
+_PAD_LOGIT = -1e30  # effectively -inf popularity: pad chunks are never drawn
+#                     (finite so categorical's gumbel arithmetic stays NaN-free)
+
+
+def _pad_placement(chunk_logits, chunk_locals, cluster: "Cluster",
+                   n_chunks: int):
+    """Canonicalize the placement axis to ``n_chunks`` catalog rows.
+
+    Uniform scenarios get a dummy catalog (never drawn: placement_on = 0);
+    skewed ones are padded with _PAD_LOGIT rows.  Pad triples are the first
+    n_replicas server ids — valid, but selected with probability ~0."""
+    n_rep = cluster.n_replicas
+    dummy_row = np.arange(n_rep, dtype=np.int32)[None, :]
+    if chunk_logits is None:
+        logits = np.full(n_chunks, _PAD_LOGIT, np.float32)
+        locals_ = np.repeat(dummy_row, n_chunks, axis=0)
+        on = 0.0
+    else:
+        logits = np.asarray(chunk_logits, np.float32)
+        locals_ = np.asarray(chunk_locals, np.int32)
+        C = logits.shape[0]
+        assert C <= n_chunks, (C, n_chunks)
+        logits = np.pad(logits, (0, n_chunks - C),
+                        constant_values=_PAD_LOGIT)
+        locals_ = np.concatenate(
+            [locals_, np.repeat(dummy_row, n_chunks - C, axis=0)], axis=0)
+        on = 1.0
+    return (jnp.asarray(logits), jnp.asarray(locals_), jnp.float32(on))
+
+
 def realize(scenario: Scenario, cluster: "Cluster", rates: "Rates",
-            T: int) -> tuple[ScenarioData, float]:
+            T: int, pad: Optional[ScenarioPad] = None
+            ) -> tuple[ScenarioData, float]:
     """Build the ScenarioData arrays + the capacity-region edge (tasks/slot
-    at load = 1) for this scenario.  Deterministic in ``scenario.seed``."""
+    at load = 1) for this scenario.  Deterministic in ``scenario.seed``.
+
+    ``pad`` canonicalizes the pytree: window arrays are padded to
+    pad.n_windows (inactive rows), the placement catalog to pad.n_chunks,
+    and ``placement_on`` selects the placement law by data — so every
+    scenario realized with the same pad shares one jit signature (the
+    one-compile sweep; see canonical_pad / tests/test_scenarios.py's
+    recompile-count guard).  pad=None reproduces the unpadded pytrees
+    exactly."""
     rng = np.random.default_rng(scenario.seed)
     base, wstart, wend, wmult = _fleet_arrays(scenario.fleet, cluster, T, rng)
     lam_shape = traffic_shape(scenario.traffic, T, rng)
     chunk_logits, chunk_locals = _placement_arrays(
         scenario.placement, cluster, rng)
+    placement_on = None
+    if pad is not None:
+        E = wstart.shape[0]
+        assert E <= pad.n_windows, (E, pad.n_windows)
+        wstart = np.pad(wstart, (0, pad.n_windows - E))
+        wend = np.pad(wend, (0, pad.n_windows - E))      # start == end: inert
+        wmult = np.pad(wmult, ((0, pad.n_windows - E), (0, 0)),
+                       constant_values=1.0)
+        chunk_logits, chunk_locals, placement_on = _pad_placement(
+            chunk_logits, chunk_locals, cluster, pad.n_chunks)
     scen = ScenarioData(
         lam_shape=jnp.asarray(lam_shape),
         base_speed=jnp.asarray(base),
@@ -218,6 +336,7 @@ def realize(scenario: Scenario, cluster: "Cluster", rates: "Rates",
         win_mult=jnp.asarray(wmult),
         chunk_logits=chunk_logits,
         chunk_locals=chunk_locals,
+        placement_on=placement_on,
     )
     lam_cap = rates.alpha * cluster.M * capacity_scale(scen, T)
     return scen, lam_cap

@@ -89,6 +89,23 @@ def scenario_names() -> tuple[str, ...]:
     return tuple(SCENARIOS)
 
 
+def registry_limits(scenarios=None) -> tuple[int, int]:
+    """Registry-wide shape maxima for canonical pytree padding.
+
+    Returns (max event-window count, max chunks_per_server among non-uniform
+    placements; 0 when every scenario places uniformly).  build.canonical_pad
+    turns these into concrete array shapes so every scenario realizes to the
+    same pytree signature and the jit'd simulator compiles once for the
+    whole sweep.
+    """
+    specs = tuple(scenarios) if scenarios is not None else tuple(
+        SCENARIOS.values())
+    n_windows = max((len(s.fleet.windows) for s in specs), default=0)
+    chunks = max((s.placement.chunks_per_server for s in specs
+                  if s.placement.kind != "uniform"), default=0)
+    return n_windows, chunks
+
+
 def get_scenario(s: Union[str, Scenario, None]) -> Scenario:
     if s is None:
         return SCENARIOS["uniform"]

@@ -16,9 +16,14 @@ the candidate-set width handed to the kernel.
 Heterogeneous fleets: pass ``rate_matrix`` ([M, 3] per-replica per-class
 service rates, e.g. from repro.core.rate_matrix with scenario speeds).  The
 workload metric and routing scores then divide by each replica's *own*
-rates; this path scores candidates in plain JAX (the Pallas kernels encode
-the homogeneous 3-vector) with identical argmin/tie semantics and the same
-probe accounting.
+rates — and the SAME Pallas kernels serve both forms: their inverse-rate
+operand is [3] or [M, 3] (the per-candidate rate gather rides the kernels'
+existing one-hot matmul), so the router never leaves the MXU path.  A
+zero-rate replica (drained / outage) carries a ``+inf`` inverse rate; the
+kernels mask it to a ``+inf`` score after the multiply, so it is never
+selected while any live candidate exists.  With identical rate-matrix rows
+the heterogeneous path is bit-identical to the homogeneous one
+(tests/test_scenarios.py asserts this).
 """
 from __future__ import annotations
 
@@ -29,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.cluster import LOCAL, RACK, REMOTE, Rates, safe_inv_rates
+from ..core.cluster import LOCAL, RACK, REMOTE, Rates
 from ..core.policies import PodSpec
 from ..kernels import pod_route, queue_update, weighted_argmin
 from .locality import FleetTopology
@@ -63,7 +68,10 @@ class PodRouter:
         if rate_matrix is not None:
             rm = np.asarray(rate_matrix, np.float32)
             assert rm.shape == (self.M, 3), rm.shape
-            self.inv_rate_m = safe_inv_rates(jnp.asarray(rm))
+            # zero-rate (drained) replicas -> +inf inverse rate; the kernels
+            # mask these to +inf scores (never 0 * inf = NaN).
+            rmj = jnp.asarray(rm)
+            self.inv_rate_m = jnp.where(rmj > 0, 1.0 / rmj, jnp.inf)
         else:
             self.inv_rate_m = None
         self.key = jax.random.PRNGKey(seed)
@@ -74,6 +82,12 @@ class PodRouter:
     @property
     def heterogeneous(self) -> bool:
         return self.inv_rate_m is not None
+
+    @property
+    def _inv(self) -> jnp.ndarray:
+        """The kernels' inverse-rate operand: [M, 3] when heterogeneous,
+        the homogeneous [3] vector otherwise."""
+        return self.inv_rate_m if self.heterogeneous else self.inv_rates
 
     # -- locality classes for a request batch ------------------------------
 
@@ -124,61 +138,34 @@ class PodRouter:
         each request's prefix.  Returns chosen replica ids [B]."""
         B = locals_.shape[0]
         cls = self._classes(locals_)
-        if self.heterogeneous:
-            sel, sel_cls = self._route_hetero(cls, locals_)
-        elif self.policy == "full":
-            sel, _ = weighted_argmin(self.W, jnp.asarray(cls), self.inv_rates)
+        inv = self._inv
+        if self.policy == "full":
+            sel, _ = weighted_argmin(self.W, jnp.asarray(cls), inv)
             sel_cls = jnp.asarray(cls)[jnp.arange(B), sel]
             self.stats.probes += B * self.M
         else:
             idx, ccls, valid = self._sample_candidates(cls, locals_)
             sel, _ = pod_route(self.W, jnp.asarray(idx), jnp.asarray(ccls),
-                               jnp.asarray(valid), self.inv_rates)
+                               jnp.asarray(valid), inv)
             take = (jnp.asarray(idx) == sel[:, None]).argmax(axis=1)
             sel_cls = jnp.take_along_axis(jnp.asarray(ccls), take[:, None],
                                           axis=1)[:, 0]
             self.stats.probes += B * idx.shape[1]
         self.stats.decisions += B
-        if self.heterogeneous:
-            self.Q = self.Q.at[sel, sel_cls].add(1)
-            self._refresh_workload()
-        else:
-            valid_b = jnp.ones((B,), bool)
-            self.Q, self.W = queue_update(self.Q, sel, sel_cls, valid_b,
-                                          self.inv_rates)
+        valid_b = jnp.ones((B,), bool)
+        self.Q, self.W = queue_update(self.Q, sel, sel_cls, valid_b, inv)
         np.add.at(self.stats.routed_by_class, np.asarray(sel_cls), 1)
         return np.asarray(sel)
-
-    def _route_hetero(self, cls: np.ndarray, locals_: np.ndarray):
-        """Per-replica-rate scoring (plain JAX; same argmin/tie semantics
-        and probe accounting as the kernel paths)."""
-        from ..core.policies import (route_balanced_pandas_full,
-                                     route_pod_candidates)
-
-        B = cls.shape[0]
-        if self.policy == "full":
-            tie = jax.random.uniform(self._next_key(), (self.M,))
-            sel, sel_cls = route_balanced_pandas_full(
-                self.W, jnp.asarray(cls), self.inv_rate_m, tie)
-            self.stats.probes += B * self.M
-        else:
-            idx, ccls, valid = self._sample_candidates(cls, locals_)
-            sel, sel_cls = route_pod_candidates(
-                self._next_key(), self.W, jnp.asarray(idx),
-                jnp.asarray(ccls), jnp.asarray(valid), self.inv_rate_m)
-            self.stats.probes += B * idx.shape[1]
-        return sel, sel_cls
-
-    def _refresh_workload(self):
-        self.W = (self.Q.astype(jnp.float32) * self.inv_rate_m).sum(-1)
 
     def complete(self, replica_ids: np.ndarray, classes: np.ndarray):
         """Mark requests finished (dequeue bookkeeping)."""
         dec = jnp.zeros((self.M, 3), jnp.int32).at[
             jnp.asarray(replica_ids), jnp.asarray(classes)].add(1)
         self.Q = jnp.maximum(self.Q - dec, 0)
-        if self.heterogeneous:
-            self._refresh_workload()
-        else:
-            self.W = (self.Q.astype(jnp.float32)
-                      * self.inv_rates[None, :]).sum(-1)
+        inv = self._inv
+        if inv.ndim == 1:
+            inv = inv[None, :]
+        # same W semantics as kernels.queue_update: dead (non-finite) entries
+        # contribute 0 — routing masks dead replicas by rate, never by W.
+        self.W = (self.Q.astype(jnp.float32)
+                  * jnp.where(jnp.isfinite(inv), inv, 0.0)).sum(-1)

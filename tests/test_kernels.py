@@ -1,8 +1,18 @@
-"""Pallas kernels vs pure-jnp oracles: shape & dtype sweeps, interpret mode."""
+"""Pallas kernels vs pure-jnp oracles: shape & dtype sweeps, interpret mode.
+
+The heterogeneous-rate battery at the bottom checks the kernels against an
+independent *numpy* oracle (not ref.py) over randomized [M, 3] inverse-rate
+matrices — log-uniform rates spanning 1e-3..1e3, deliberate exact ties,
+f32/bf16 workloads, and zero-rate (+inf inverse-rate) servers/columns —
+via the hypothesis replay harness (tests/_hypothesis_stub.py when the real
+package is absent).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.kernels import pod_route, queue_update, ref, weighted_argmin
 
@@ -50,6 +60,159 @@ def test_queue_update_matches_oracle(M, B, C):
     rq2, rw2 = ref.queue_update_ref(Q, sel, scl, valid, INV)
     assert (q2 == rq2).all()
     np.testing.assert_allclose(np.asarray(w2), np.asarray(rw2), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous [M, 3] inverse-rate battery vs an independent numpy oracle.
+# ---------------------------------------------------------------------------
+
+# Small fixed shape pool so the property replays share compiled kernels
+# (fresh shapes would recompile the interpret-mode kernels per example).
+HETERO_SHAPES = [(64, 3, 5), (128, 8, 8), (129, 9, 16), (96, 17, 11)]
+
+
+def _np_weighted_argmin(W32, cls, inv_m):
+    """Numpy oracle: argmin_m W[m] * inv_m[m, cls[b, m]]; non-finite
+    inverse rates score +inf (masked after the multiply); first-index ties."""
+    factor = inv_m[np.arange(cls.shape[1])[None, :], cls]          # [B, M]
+    with np.errstate(invalid="ignore"):
+        scores = np.where(np.isfinite(factor), W32[None, :] * factor, np.inf)
+    return np.argmin(scores, axis=1), np.min(scores, axis=1)
+
+
+def _np_pod_route(W32, ci, cc, cv, inv_m):
+    """Numpy oracle for candidate-list routing; first-slot ties."""
+    factor = inv_m[ci, cc]                                         # [B, C]
+    with np.errstate(invalid="ignore"):
+        scores = np.where(cv & np.isfinite(factor), W32[ci] * factor, np.inf)
+    c = np.argmin(scores, axis=1)
+    return np.take_along_axis(ci, c[:, None], axis=1)[:, 0], np.min(scores, axis=1)
+
+
+def _hetero_case(seed: int):
+    """Randomized heterogeneous routing instance.
+
+    Rates span 1e-3..1e3 log-uniform; some examples draw W and the rate rows
+    from tiny discrete pools so exact score ties are dense (including at the
+    min); some examples kill whole servers or a single rate column
+    (inverse rate +inf); workloads are f32 or bf16.
+    """
+    rng = np.random.default_rng(seed)
+    M, B, C = HETERO_SHAPES[rng.integers(len(HETERO_SHAPES))]
+    inv_m = np.exp(rng.uniform(np.log(1e-3), np.log(1e3),
+                               (M, 3))).astype(np.float32)
+    if rng.random() < 0.5:           # dense exact ties: few distinct rows
+        pool = inv_m[:4]
+        inv_m = pool[rng.integers(4, size=M)]
+    if rng.random() < 0.6:           # dead servers (outage / drain)
+        inv_m[rng.choice(M, size=max(1, M // 8), replace=False)] = np.inf
+    if rng.random() < 0.4:           # a zero-rate column slice
+        inv_m[rng.random(M) < 0.3, rng.integers(3)] = np.inf
+    if rng.random() < 0.5:           # few distinct workloads: ties at the min
+        W = rng.choice(np.array([0.0, 1.0, 2.5, 77.0], np.float32), size=M)
+    else:
+        W = rng.uniform(0, 100, M).astype(np.float32)
+    dtype = jnp.bfloat16 if rng.random() < 0.4 else jnp.float32
+    W_j = jnp.asarray(W).astype(dtype)
+    W32 = np.asarray(W_j.astype(jnp.float32))    # what the kernel computes on
+    return rng, M, B, C, inv_m, W_j, W32
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_weighted_argmin_hetero_property(seed):
+    rng, M, B, C, inv_m, W_j, W32 = _hetero_case(seed)
+    cls = rng.integers(0, 3, (B, M)).astype(np.int32)
+    sel, val = weighted_argmin(W_j, jnp.asarray(cls), jnp.asarray(inv_m))
+    nsel, nval = _np_weighted_argmin(W32, cls, inv_m)
+    np.testing.assert_array_equal(np.asarray(sel), nsel)
+    np.testing.assert_allclose(np.asarray(val), nval, rtol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pod_route_hetero_property(seed):
+    rng, M, B, C, inv_m, W_j, W32 = _hetero_case(seed)
+    ci = rng.integers(0, M, (B, C)).astype(np.int32)
+    if rng.random() < 0.5:           # duplicate candidates: exact slot ties
+        ci[:, 1::2] = ci[:, 0::2][:, :ci[:, 1::2].shape[1]]
+    cc = rng.integers(0, 3, (B, C)).astype(np.int32)
+    cv = rng.random((B, C)) < 0.85
+    cv[:, 0] = True
+    sel, val = pod_route(W_j, jnp.asarray(ci), jnp.asarray(cc),
+                         jnp.asarray(cv), jnp.asarray(inv_m))
+    nsel, nval = _np_pod_route(W32, ci, cc, cv, inv_m)
+    np.testing.assert_array_equal(np.asarray(sel), nsel)
+    np.testing.assert_allclose(np.asarray(val), nval, rtol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_queue_update_hetero_property(seed):
+    rng, M, B, C, inv_m, W_j, W32 = _hetero_case(seed)
+    Q = rng.integers(0, 50, (M, 3)).astype(np.int32)
+    sel = rng.integers(0, M, B).astype(np.int32)
+    scl = rng.integers(0, 3, B).astype(np.int32)
+    valid = rng.random(B) < 0.8
+    q2, w2 = queue_update(jnp.asarray(Q), jnp.asarray(sel), jnp.asarray(scl),
+                          jnp.asarray(valid), jnp.asarray(inv_m))
+    nq = Q.copy()
+    np.add.at(nq, (sel[valid], scl[valid]), 1)
+    inv_f = np.where(np.isfinite(inv_m), inv_m, 0.0)
+    nw = (nq * inv_f).sum(axis=1, dtype=np.float32)
+    np.testing.assert_array_equal(np.asarray(q2), nq)
+    np.testing.assert_allclose(np.asarray(w2), nw, rtol=1e-5)
+
+
+@pytest.mark.parametrize("M,B,C", SHAPES)
+def test_weighted_argmin_hetero_matches_jnp_ref(M, B, C):
+    """ref.py (the jnp oracle) and the kernel agree on [M, 3] operands too."""
+    rng = np.random.default_rng(M * 31 + B)
+    inv_m = rng.uniform(1e-2, 1e2, (M, 3)).astype(np.float32)
+    inv_m[:: max(M // 7, 1)] = np.inf
+    W = rng.uniform(0, 100, M).astype(np.float32)
+    cls = rng.integers(0, 3, (B, M)).astype(np.int32)
+    sel, val = weighted_argmin(jnp.asarray(W), jnp.asarray(cls),
+                               jnp.asarray(inv_m))
+    rsel, rval = ref.weighted_argmin_ref(jnp.asarray(W), jnp.asarray(cls),
+                                         jnp.asarray(inv_m))
+    np.testing.assert_array_equal(np.asarray(sel), np.asarray(rsel))
+    np.testing.assert_allclose(np.asarray(val), np.asarray(rval), rtol=1e-5)
+
+
+def test_hetero_lowest_index_ties_survive_onehot_formulation():
+    """All-equal scores: the one-hot gather/argmin must keep the lowest
+    server index (weighted_argmin) / lowest candidate slot (pod_route)."""
+    M, B, C = 96, 11, 9
+    W = jnp.full((M,), 3.0, jnp.float32)
+    inv_m = jnp.broadcast_to(jnp.float32(2.0), (M, 3))
+    cls = jnp.zeros((B, M), jnp.int32)
+    sel, val = weighted_argmin(W, cls, inv_m)
+    assert (np.asarray(sel) == 0).all()
+    np.testing.assert_allclose(np.asarray(val), 6.0)
+
+    rng = np.random.default_rng(0)
+    ci = jnp.asarray(rng.integers(0, M, (B, C)).astype(np.int32))
+    cc = jnp.ones((B, C), jnp.int32)
+    cv = jnp.ones((B, C), bool)
+    sel, _ = pod_route(W, ci, cc, cv, inv_m)
+    np.testing.assert_array_equal(np.asarray(sel), np.asarray(ci)[:, 0])
+
+
+def test_hetero_zero_rate_never_selected_over_live_candidate():
+    """A drained (zero-rate, +inf inverse-rate) server with an EMPTY queue
+    must score +inf — not 0 * inf = NaN — so a live candidate always wins."""
+    M, B = 64, 8
+    rng = np.random.default_rng(1)
+    inv_m = np.full((M, 3), 10.0, np.float32)
+    dead = rng.choice(M, size=M // 2, replace=False)
+    inv_m[dead] = np.inf
+    W = np.zeros(M, np.float32)          # every queue empty: the NaN hazard
+    cls = rng.integers(0, 3, (B, M)).astype(np.int32)
+    sel, val = weighted_argmin(jnp.asarray(W), jnp.asarray(cls),
+                               jnp.asarray(inv_m))
+    assert not np.isin(np.asarray(sel), dead).any()
+    assert np.isfinite(np.asarray(val)).all()
 
 
 def test_kernels_compose_as_router_pipeline():
