@@ -14,10 +14,15 @@ sensitivity_d = (mean_T[d=3] - mean_T[d=16]) / mean_T[d=16]
 
 One-compile sweep: every scenario is realized against the registry-wide
 canonical pad (scenarios.canonical_pad) with one shared a_max, so the jit'd
-simulator step compiles once per (algo, pod) and the other 8 scenarios ride
+simulator step compiles once per (algo, pod) and the other scenarios ride
 the cache — the per-scenario recompile used to dominate smoke wall-clock.
 ``--scenarios=name1,name2`` restricts the sweep (CI runs one natively-padded
-and one natively-max-shaped scenario).
+and one natively-max-shaped scenario).  A ``+`` inside a name composes
+registry scenarios on the fly (``--scenarios=slow_rack+flash_crowd`` runs
+scenarios.compose of the two): the registry pad reserves pairwise window
+headroom, so ad-hoc pairs stay on the registry's compiled signature (the
+shared a_max is widened over the selection when a composition's traffic
+peak exceeds the registry's).
 """
 import sys
 import time
@@ -27,7 +32,7 @@ import numpy as np
 from common import Preset, preset_from_argv, save_artifact
 
 from repro.core import PodSpec, simulate_grid
-from repro.scenarios import SCENARIOS, canonical_a_max, canonical_pad
+from repro.scenarios import SCENARIOS, canonical_a_max, canonical_pad, compose
 
 ALGOS = ("balanced_pandas", "balanced_pandas_pod", "jsq_maxweight_pod")
 
@@ -36,11 +41,12 @@ ALGOS = ("balanced_pandas", "balanced_pandas_pod", "jsq_maxweight_pod")
 D_SWEEP = (PodSpec(1, 2), PodSpec(2, 6), PodSpec(4, 12))
 
 
-def _mean_T(preset: Preset, algo: str, name: str, pod=None,
+def _mean_T(preset: Preset, algo: str, scenario, pod=None,
             pad=None, a_max=None) -> dict:
+    """scenario: a registered name or a Scenario (ad-hoc composition)."""
     res = simulate_grid(algo, preset.cluster, preset.rates,
                         [preset.fixed_load], preset.n_seeds, preset.cfg,
-                        pod=pod, scenario=name, pad=pad, a_max=a_max)
+                        pod=pod, scenario=scenario, pad=pad, a_max=a_max)
     t = np.asarray(res.mean_completion_norm)       # [seeds, 1]
     return {
         "mean": float(np.nanmean(t)),
@@ -56,31 +62,46 @@ def _selected_scenarios() -> dict:
     if not only:
         return dict(SCENARIOS)
     wanted = [n for o in only for n in o.split(",") if n]
-    unknown = set(wanted) - set(SCENARIOS)
+    parts = {p for n in wanted for p in (n.split("+") if "+" in n else (n,))}
+    unknown = parts - set(SCENARIOS)
     if unknown:
         raise SystemExit(f"--scenarios: unknown {sorted(unknown)}; "
                          f"registered: {sorted(SCENARIOS)}")
-    return {n: SCENARIOS[n] for n in wanted}
+    # a `+` composes registry scenarios ad hoc (scenarios.compose)
+    return {n: (compose(*n.split("+")) if "+" in n else SCENARIOS[n])
+            for n in wanted}
 
 
 def main(preset=None):
     p = preset or preset_from_argv()
+    selected = _selected_scenarios()
     # canonical padding over the FULL registry (not just the selection):
-    # any filtered run shares the same compiled signature as the full sweep.
+    # any filtered run shares the same compiled signature as the full sweep
+    # (pairwise + compositions ride the registry pad's compose headroom);
+    # the shared a_max widens over ad-hoc compositions whose traffic peak
+    # exceeds the registry's.
     pad = canonical_pad(p.cluster)
-    a_max = canonical_a_max(p.cluster, p.rates, p.cfg, p.fixed_load)
+    extra = [s for n, s in selected.items() if n not in SCENARIOS]
+    # a 3+-way ad-hoc composition can union more windows than the pairwise
+    # headroom reserves; widen only then (the run leaves the registry's
+    # shared signature, but still compiles once for its own selection)
+    need = max((len(s.fleet.windows) for s in extra), default=0)
+    if need > pad.n_windows:
+        pad = pad._replace(n_windows=need)
+    a_max = canonical_a_max(p.cluster, p.rates, p.cfg, p.fixed_load,
+                            scenarios=list(SCENARIOS.values()) + extra)
     rows = {}
-    for name, scen in _selected_scenarios().items():
+    for name, scen in selected.items():
         t0 = time.time()
         row = {"description": scen.description, "algos": {}}
-        d_means = {pod.d: _mean_T(p, "balanced_pandas_pod", name, pod=pod,
+        d_means = {pod.d: _mean_T(p, "balanced_pandas_pod", scen, pod=pod,
                                   pad=pad, a_max=a_max)
                    for pod in D_SWEEP}
         for algo in ALGOS:
             # the d=8 sweep cell IS BP-Pod at its default PodSpec(2, 6)
             # with the same seeds — reuse instead of re-simulating
             row["algos"][algo] = (d_means[8] if algo == "balanced_pandas_pod"
-                                  else _mean_T(p, algo, name,
+                                  else _mean_T(p, algo, scen,
                                                pad=pad, a_max=a_max))
         d_small, d_large = min(d_means), max(d_means)
         row["d_sweep"] = {str(d): m for d, m in d_means.items()}

@@ -29,6 +29,7 @@ from .policies import (
     route_pod_candidates,
     sample_rack_peer,
     sample_remote_peer,
+    weighted_score,
 )
 from .simulator import (
     ALGORITHMS,

@@ -124,28 +124,37 @@ def capacity_arrival_rate(cluster: Cluster, rates: Rates, load: float) -> float:
 # ---------------------------------------------------------------------------
 # Per-server rates.  A heterogeneous fleet scales the (alpha, beta, gamma)
 # class rates by a per-server speed multiplier: rate_matrix[m, c] =
-# speed[m] * rates[c].  speed == ones reproduces the symmetric model.
+# speed[m, c] * rates[c].  speed == ones reproduces the symmetric model.
 # ---------------------------------------------------------------------------
-
-_DEAD_INV_RATE = 1e9  # finite stand-in for 1/rate of a speed-0 (drained)
-#                       server: routing sees an effectively infinite workload
-#                       without inf*0 NaN hazards downstream.
 
 
 def rate_matrix(rates: Rates, speed: jnp.ndarray) -> jnp.ndarray:
-    """[M, 3] per-server per-class service rates; speed: [M]."""
-    return speed[:, None] * rates.as_array()[None, :]
+    """[M, 3] per-server per-class service rates.
+
+    speed: [M] whole-server multipliers, or [M, 3] per-locality-class
+    multipliers (per-tier degradation windows — repro.scenarios)."""
+    speed = jnp.asarray(speed)
+    if speed.ndim == 1:
+        speed = speed[:, None]
+    return speed * rates.as_array()[None, :]
 
 
 def safe_inv_rates(rate_m: jnp.ndarray) -> jnp.ndarray:
-    """Reciprocal of a rate array, with the shared dead-server sentinel
-    wherever the rate is 0 (drained / failed servers)."""
-    return jnp.where(rate_m > 0, 1.0 / jnp.maximum(rate_m, 1e-12),
-                     _DEAD_INV_RATE)
+    """Reciprocal of a rate array; zero-rate (drained / failed) entries
+    carry ``+inf`` — the kernels' contract (kernels/invrates.py).
+
+    Consumers must mask, not multiply blindly: routing scores become
+    ``+inf`` AFTER the multiply (policies.weighted_score) and workload
+    sums treat non-finite entries as contributing 0 (the queue_update
+    kernel's semantics).  The old finite 1e9 sentinel let a drained
+    server with an empty queue score 0 and absorb one task per outage
+    window; ``+inf`` makes it unselectable while any live candidate
+    exists."""
+    return jnp.where(rate_m > 0, 1.0 / jnp.maximum(rate_m, 1e-12), jnp.inf)
 
 
 def inv_rate_matrix(rates: Rates, speed: jnp.ndarray) -> jnp.ndarray:
-    """[M, 3] reciprocal rates (mean service slots), safe at speed 0."""
+    """[M, 3] reciprocal rates (mean service slots), +inf at speed 0."""
     return safe_inv_rates(rate_matrix(rates, speed))
 
 

@@ -74,6 +74,15 @@ def masked_draws(key: jax.Array, set_mask: jnp.ndarray, k: int) -> tuple[jnp.nda
     return jnp.minimum(idx, set_mask.shape[-1] - 1), valid
 
 
+def weighted_score(W: jnp.ndarray, inv: jnp.ndarray) -> jnp.ndarray:
+    """``W * inv`` under the +inf zero-rate contract (kernels/invrates.py):
+    a non-finite inverse rate (drained / failed server) scores ``+inf``
+    AFTER the multiply — never ``0 * inf = NaN``, and never the 0 a finite
+    sentinel produced for an empty dead server (which then absorbed one
+    task per outage window).  Mirrors the kernels' dead-flag mask."""
+    return jnp.where(jnp.isfinite(inv), W * inv, jnp.inf)
+
+
 def inv_rate_for(inv_rates: jnp.ndarray, idx: jnp.ndarray,
                  cls: jnp.ndarray) -> jnp.ndarray:
     """Reciprocal service rate of server ``idx`` for a task of class ``cls``.
@@ -149,7 +158,8 @@ def route_pod_candidates(
     uniformly at random.  Returns (server, class) for each task.
     inv_rates: [3] or per-server [M, 3] (see inv_rate_for).
     """
-    scores = W[cand_idx] * inv_rate_for(inv_rates, cand_idx, cand_cls)
+    scores = weighted_score(W[cand_idx],
+                            inv_rate_for(inv_rates, cand_idx, cand_cls))
     rnd = jax.random.uniform(key, cand_idx.shape)
     c = lex_argmin(scores, cand_cls.astype(jnp.float32), rnd, mask=valid)
     sel = jnp.take_along_axis(cand_idx, c[..., None], axis=-1)[..., 0]
@@ -171,7 +181,7 @@ def route_balanced_pandas_full(
     §Paper-claims), then ``tie_rnd`` (a [M] random priority, shared within a
     slot — unbiased across slots).  inv_rates: [3] or per-server [M, 3]."""
     m = jnp.arange(cls.shape[-1], dtype=jnp.int32)
-    ww = W * inv_rate_for(inv_rates, m, cls)
+    ww = weighted_score(W, inv_rate_for(inv_rates, m, cls))
     mask = jnp.ones(cls.shape, bool)
     keys = ((cls.astype(jnp.float32),) if class_tiebreak else ())
     sel = lex_argmin(ww, *keys,

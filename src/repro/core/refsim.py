@@ -46,28 +46,35 @@ def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
                     speed: np.ndarray | None = None) -> RefResult:
     """Balanced-Pandas (pod=False) or Balanced-Pandas-Pod (pod=True).
 
-    speed: optional [M] per-server speed multipliers (constant in time) —
-    the heterogeneous-fleet model of repro.scenarios: durations are sampled
-    in speed-1 work units at the class rate, a busy server m completes
-    speed[m] units per slot, and the workload metric / routing scores use
-    each server's own [M, 3] rates.  None == all ones == the symmetric model.
-    The capacity edge matches the scenario engine: lam = load * alpha *
-    sum(speed)."""
+    speed: optional per-server speed multipliers (constant in time) — the
+    heterogeneous-fleet model of repro.scenarios: [M] whole-server, or
+    [M, 3] per locality class (per-tier degradation windows).  Durations
+    are sampled in speed-1 work units at the class rate, a busy server m
+    completes speed[m, c] units per slot for its in-flight class-c task,
+    and the workload metric / routing scores use each server's own [M, 3]
+    rates, with zero-rate entries carried as +inf inverse rates (the
+    kernels' contract: 0 workload contribution, +inf routing score).
+    None == all ones == the symmetric model.  The capacity edge matches
+    the scenario engine: lam = load * alpha * sum(local speed)."""
     rng = np.random.default_rng(seed)
     M = cluster.M
     inv = 1.0 / np.array([rates.alpha, rates.beta, rates.gamma])
     if speed is None:
         speed = np.ones(M)
     speed = np.asarray(speed, np.float64)
-    # per-server reciprocal rates; finite big number for speed-0 servers
-    inv_m = np.where(speed[:, None] > 0,
-                     inv[None, :] / np.maximum(speed[:, None], 1e-12), 1e9)
-    lam = load * rates.alpha * speed.sum()
+    if speed.ndim == 1:
+        speed = np.repeat(speed[:, None], 3, axis=1)
+    # per-server reciprocal rates; +inf for drained (zero-rate) tiers
+    inv_m = np.where(speed > 0, inv[None, :] / np.maximum(speed, 1e-12),
+                     np.inf)
+    inv_m_w = np.where(np.isfinite(inv_m), inv_m, 0.0)   # workload weights
+    lam = load * rates.alpha * speed[:, 0].sum()
 
     queues = [[[], [], []] for _ in range(M)]   # arrival slots, FIFO
     Q = np.zeros((M, 3), np.int64)
     busy = np.zeros(M, bool)
     rem = np.zeros(M, np.float64)               # remaining work units
+    serving_cls = np.zeros(M, np.int64)         # class of in-service task
     started_at = np.zeros(M, np.int64)          # arrival slot of in-service task
     sojourns: list[int] = []
     start_cls_counts = np.zeros(3, np.int64)
@@ -76,20 +83,22 @@ def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
 
     for t in range(T):
         # completions
-        rem[busy] -= speed[busy]
+        rem[busy] -= speed[np.arange(M), serving_cls][busy]
         done = busy & (rem <= 0)
         for m in np.where(done)[0]:
             if t >= warmup and started_at[m] >= warmup:
                 sojourns.append(t - started_at[m])
         busy &= ~done
 
-        # scheduling: own queues, local first (speed-0 servers are drained)
-        for m in np.where(~busy & (speed > 0))[0]:
+        # scheduling: own queues, first servable class local > rack > remote
+        # (a drained tier is skipped; a fully drained server starts nothing)
+        for m in np.where(~busy & (speed > 0).any(axis=1))[0]:
             for c in range(3):
-                if queues[m][c]:
+                if queues[m][c] and speed[m, c] > 0:
                     arr_slot = queues[m][c].pop(0)
                     Q[m, c] -= 1
                     busy[m] = True
+                    serving_cls[m] = c
                     started_at[m] = arr_slot
                     p = 1.0 / inv[c]
                     rem[m] = rng.geometric(p)
@@ -101,7 +110,7 @@ def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
         for _ in range(rng.poisson(lam)):
             locals_ = rng.choice(M, size=cluster.n_replicas, replace=False)
             cls = _locality(cluster, locals_)
-            W = (Q * inv_m).sum(axis=1)
+            W = (Q * inv_m_w).sum(axis=1)
             if pod:
                 cand = list(locals_)
                 rack_set = np.where(cls == RACK)[0]
@@ -113,7 +122,9 @@ def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
                 cand = np.array(cand)
             else:
                 cand = np.arange(M)
-            ww = W[cand] * inv_m[cand, cls[cand]]
+            ic = inv_m[cand, cls[cand]]
+            # +inf contract: dead candidates score +inf after the multiply
+            ww = np.where(np.isfinite(ic), W[cand] * ic, np.inf)
             # ties: faster class, then random
             best = ww.min()
             tied = cand[ww == best]

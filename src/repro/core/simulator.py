@@ -29,15 +29,30 @@ Routing modes:
   sequential — each arrival sees the workload left by the previous one
                (faithful to the paper's per-arrival routing; inner scan).
   batched    — all arrivals in a slot route against one workload snapshot
-               (what a batching RPC scheduler does; what kernels/ accelerates).
+               (what a batching RPC scheduler does).  The BP family's
+               batched path calls the Pallas kernels (kernels.pod_route /
+               kernels.weighted_argmin) directly — the same [M, 3]-rate
+               MXU path the production PodRouter runs, traced inline into
+               the jit'd step (interpret mode off-TPU).  Kernel ties
+               resolve by candidate order (locals first — the class
+               preference) instead of the sequential path's shared random
+               priority; full-BP scores get a tiny uniform lift so exact
+               zero-workload ties also resolve by rate, not server id.
 
 Scenarios (repro.scenarios): every run is parameterized by a ScenarioData
 pytree — a [T] arrival-intensity shape, per-server speed multipliers with
 time-indexed event windows, and optionally Zipf-skewed replica placement.
-Durations are sampled in speed-1 work units at the class rate; a busy server
-completes speed_t[m] units per slot, so a straggler slows its in-flight task
-and a drained server (speed 0) freezes and starts nothing.  The BP workload
-metric divides each sub-queue by the server's own current [M, 3] rates.
+Speed is per locality CLASS: speed_t is an [M, 3] matrix (whole-server
+events carry equal columns; per-class windows — network-tier degradation,
+ToR cascades — scale beta/gamma independently).  Durations are sampled in
+speed-1 work units at the class rate; a busy server completes
+speed_t[m, c] units per slot for its in-flight class-c task, so a
+straggler slows its in-flight task and a drained server (speed 0) freezes
+and starts nothing — and a server whose beta tier is down can still start
+local work.  The BP workload metric divides each sub-queue by the server's
+own current [M, 3] rates, with drained (zero-rate) entries carried as
++inf inverse rates: they contribute 0 workload and score +inf in routing
+(policies.weighted_score), so an empty dead server is never selected.
 The default `uniform` scenario reproduces the symmetric model exactly.
 For sweeps, ``simulate(..., pad=scenarios.canonical_pad(cluster),
 a_max=scenarios.canonical_a_max(...))`` realizes every scenario to one
@@ -72,6 +87,8 @@ from .cluster import (
     locality_class,
     sample_durations,
 )
+from ..kernels import pod_route as kernel_pod_route
+from ..kernels import weighted_argmin as kernel_weighted_argmin
 from ..scenarios.build import (
     ScenarioData,
     realize,
@@ -94,6 +111,16 @@ from .policies import (
 )
 
 _INF = jnp.inf
+
+# Uniform workload lift for the kernel-backed full-BP batched path: the
+# kernels break exact score ties by lowest index, so an all-empty fleet
+# (every score 0 * inv = 0) would route everything to server 0 regardless
+# of class.  Adding EPS makes a zero-workload score EPS * inv[m, cls] —
+# the argmin then prefers the fastest (local) tier, matching the
+# sequential path's class tie-break.  EPS is ~1e-9 of any real workload
+# gap, and f32 addition absorbs it entirely once W >> EPS (where genuine
+# ties are measure-zero anyway).
+_BP_TIE_EPS = 1e-6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,10 +188,16 @@ class SimResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def _progress_service(busy, rem, speed):
-    """Busy servers complete ``speed[m]`` work units this slot; rem is
-    float32 work remaining.  Return (busy', rem', completed_mask)."""
-    rem = jnp.where(busy, rem - speed, 0.0)
+def _speed_of_class(speed, cls):
+    """[M] per-server speed for class ``cls[m]``; speed: [M, 3]."""
+    return jnp.take_along_axis(speed, cls[:, None], axis=1)[:, 0]
+
+
+def _progress_service(busy, rem, speed, cls):
+    """Busy servers complete ``speed[m, cls[m]]`` work units this slot
+    (cls = class of the in-flight task); rem is float32 work remaining.
+    Return (busy', rem', completed_mask)."""
+    rem = jnp.where(busy, rem - _speed_of_class(speed, cls), 0.0)
     completed = busy & (rem <= 0)
     busy = busy & ~completed
     rem = jnp.where(busy, rem, 0.0)
@@ -236,20 +269,27 @@ class BPState(NamedTuple):
 def _bp_workload(Q: jnp.ndarray, inv_rates: jnp.ndarray) -> jnp.ndarray:
     """Paper §IV-A: W_m = Q^l/alpha_m + Q^k/beta_m + Q^r/gamma_m.
 
-    inv_rates: [3] (homogeneous) or per-server [M, 3] (heterogeneous)."""
+    inv_rates: [3] (homogeneous) or per-server [M, 3] (heterogeneous).
+    Non-finite entries (drained servers, +inf inverse rate) contribute 0 —
+    the queue_update kernel's semantics; routing masks dead servers by
+    their rate (weighted_score), never by their W."""
     if inv_rates.ndim == 1:
         inv_rates = inv_rates[None, :]
-    return (Q.astype(jnp.float32) * inv_rates).sum(axis=-1)
+    finite = jnp.where(jnp.isfinite(inv_rates), inv_rates, 0.0)
+    return (Q.astype(jnp.float32) * finite).sum(axis=-1)
 
 
 def _bp_schedule(key, Q, busy, rem, cls, rates, service_dist, sigma,
-                 can_serve):
-    """Idle servers start their own head-of-class task: local > rack > remote.
-    Purely local information — no cross-server messages (paper §IV-A).
-    can_serve: bool [M] — drained / failed servers start nothing."""
-    has = Q > 0
-    pick = jnp.argmax(has, axis=1).astype(jnp.int32)   # first nonempty class
-    start = (~busy) & has.any(axis=1) & can_serve
+                 servable):
+    """Idle servers start their own head-of-class *servable* task:
+    local > rack > remote among classes whose tier is up.  Purely local
+    information — no cross-server messages (paper §IV-A).
+    servable: bool [M, 3] (speed > 0) — a drained server starts nothing;
+    a server whose beta tier is down skips rack-local work but still
+    starts local/remote tasks."""
+    has = (Q > 0) & servable
+    pick = jnp.argmax(has, axis=1).astype(jnp.int32)   # first servable class
+    start = (~busy) & has.any(axis=1)
     Q = Q - (jax.nn.one_hot(pick, 3, dtype=jnp.int32) * start[:, None].astype(jnp.int32))
     dur = sample_durations(key, pick, rates, service_dist, sigma)
     busy = busy | start
@@ -262,7 +302,14 @@ def _bp_schedule(key, Q, busy, rem, cls, rates, service_dist, sigma,
 
 def _bp_route_batch(key, cluster, Q, cls_arr, locals_, mask, inv_rates, pod,
                     sequential: bool, class_tiebreak: bool = True):
-    """Route a slot's arrival batch; returns (Q', sel_cls [A])."""
+    """Route a slot's arrival batch; returns (Q', sel_cls [A]).
+
+    sequential: per-arrival plain-JAX routing, each arrival seeing the
+    previous one's queues (the paper's model; random tie-breaks).
+    batched: the whole batch routes against one workload snapshot through
+    the Pallas kernels — pod_route over the sampled candidate lists, or
+    weighted_argmin over all M for full BP (class_tiebreak is a
+    sequential-path knob; kernel ties resolve by candidate order)."""
     k_tie, k_pod, k_seq = jax.random.split(key, 3)
     tie_rnd = jax.random.uniform(k_tie, (cluster.M,))
 
@@ -284,12 +331,13 @@ def _bp_route_batch(key, cluster, Q, cls_arr, locals_, mask, inv_rates, pod,
     else:
         W = _bp_workload(Q, inv_rates)
         if pod is None:
-            sel, sel_cls = route_balanced_pandas_full(W, cls_arr, inv_rates,
-                                                      tie_rnd, class_tiebreak)
+            sel, _ = kernel_weighted_argmin(W + _BP_TIE_EPS, cls_arr,
+                                            inv_rates)
         else:
-            kc, kt = jax.random.split(k_pod)
+            kc, _ = jax.random.split(k_pod)
             ci, cc, cv = pod_candidates(kc, cluster, locals_, cls_arr, pod)
-            sel, sel_cls = route_pod_candidates(kt, W, ci, cc, cv, inv_rates)
+            sel, _ = kernel_pod_route(W, ci, cc, cv, inv_rates)
+        sel_cls = jnp.take_along_axis(cls_arr, sel[:, None], axis=1)[:, 0]
         Q = Q.at[sel, sel_cls].add(mask.astype(jnp.int32))
     return Q, sel_cls
 
@@ -299,10 +347,11 @@ def _bp_step(state: BPState, sums: RawSums, key, *, cluster, rates, cfg,
              class_tiebreak=True):
     k_sched, k_arr, k_route = jax.random.split(key, 3)
 
-    busy, rem, completed = _progress_service(state.busy, state.rem, speed)
+    busy, rem, completed = _progress_service(state.busy, state.rem, speed,
+                                             state.cls)
     Q, busy, rem, cls_serv, starts, n_started = _bp_schedule(
         k_sched, state.Q, busy, rem, state.cls, rates, cfg.service_dist,
-        cfg.sigma, can_serve=speed > 0)
+        cfg.sigma, servable=speed > 0)
 
     mask, locals_, cls_arr, clipped = _arrival_batch(k_arr, cluster, scen,
                                                      lam_t, a_max,
@@ -365,15 +414,16 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
     variant: "maxweight" (argmax of rate-weighted queue lengths — the serving
     server's own per-class rates, so a fast server outbids a slow one for the
     same queue — over all M or over 1+d' Pod samples) or "priority" (own >
-    longest-in-rack > longest-anywhere).  speed: [M] current multipliers;
-    speed-0 servers are ineligible."""
+    longest-in-rack > longest-anywhere).  speed: [M, 3] current per-class
+    multipliers; a (server, queue) pair whose locality-class tier is down
+    (speed 0) is ineligible, and a fully drained server schedules nothing."""
     M = cluster.M
     S = min(cfg.s_max, M)
     k_rows, k_cand, k_tie, k_grant, k_dur = jax.random.split(key, 5)
 
     idle = ~busy
     anyq = (Q > 0).any()
-    eligible = idle & ((Q > 0) | anyq) & (speed > 0)
+    eligible = idle & ((Q > 0) | anyq) & (speed > 0).any(axis=1)
     # pick up to S eligible servers (random priority; the rest retry next slot)
     rkey = jnp.where(eligible, jax.random.uniform(k_rows, (M,)), _INF)
     order = jnp.argsort(rkey)
@@ -383,8 +433,9 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
     qf = Q.astype(jnp.float32)
     if variant == "maxweight" and pod is None:
         rel = _relation_rows(cluster, rows)              # [S, M]
-        w = qf[None, :] * rates.as_array()[rel] * speed[rows][:, None]
-        cand = jnp.broadcast_to((Q > 0)[None, :], (S, M))
+        sp = speed[rows[:, None], rel]                   # serving server's
+        w = qf[None, :] * rates.as_array()[rel] * sp     # per-class speed
+        cand = (Q > 0)[None, :] & (sp > 0)
         rnd = jax.random.uniform(k_tie, (S, M))
         tgt = lex_argmax(w, rnd, mask=cand)
         val = jnp.take_along_axis(w, tgt[:, None], axis=1)[:, 0]
@@ -399,8 +450,9 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
             jnp.full((S, 1), LOCAL, jnp.int32),
             jnp.full((S, pod.d_rack), RACK, jnp.int32),
             jnp.full((S, pod.d_remote), REMOTE, jnp.int32)], axis=1)
-        w = qf[cand_idx] * rates.as_array()[rel] * speed[rows][:, None]
-        cand = Q[cand_idx] > 0
+        sp = speed[rows[:, None], rel]
+        w = qf[cand_idx] * rates.as_array()[rel] * sp
+        cand = (Q[cand_idx] > 0) & (sp > 0)
         rnd = jax.random.uniform(k_tie, cand_idx.shape)
         c = lex_argmax(w, rnd, mask=cand)
         tgt = jnp.take_along_axis(cand_idx, c[:, None], axis=1)[:, 0]
@@ -409,8 +461,9 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
         prio = (-val,)
     elif variant == "priority":
         rel = _relation_rows(cluster, rows)              # [S, M]
-        nonempty = (Q > 0)[None, :]
-        own_has = Q[rows] > 0
+        sp = speed[rows[:, None], rel]
+        nonempty = (Q > 0)[None, :] & (sp > 0)
+        own_has = (Q[rows] > 0) & (speed[rows, LOCAL] > 0)
         rack_set = (rel == RACK) & nonempty
         glob_set = (rel == REMOTE) & nonempty
         rnd = jax.random.uniform(k_tie, (S, M))
@@ -452,7 +505,8 @@ def _sq_step(state: SQState, sums: RawSums, key, *, cluster, rates, cfg,
     del inv_rate_m  # JSQ routing is workload-metric-free
     k_sched, k_arr, k_route = jax.random.split(key, 3)
 
-    busy, rem, completed = _progress_service(state.busy, state.rem, speed)
+    busy, rem, completed = _progress_service(state.busy, state.rem, speed,
+                                             state.cls)
     Q, busy, rem, cls_serv, starts, n_sched = _sq_schedule(
         k_sched, cluster, state.Q, busy, rem, state.cls, rates, cfg, variant,
         pod, speed)
@@ -506,11 +560,11 @@ def _fcfs_step(state: FCFSState, sums: RawSums, key, *, cluster, rates, cfg,
     G = min(cfg.s_max, M)
     k_rank, k_loc, k_dur, k_arr = jax.random.split(key, 4)
 
-    busy, rem, completed = _progress_service(state.busy, state.rem, speed)
-    idle = (~busy) & (speed > 0)
+    busy, rem, completed = _progress_service(state.busy, state.rem, speed,
+                                             state.cls)
+    idle = (~busy) & (speed > 0).any(axis=1)
     r = jnp.where(idle, jax.random.uniform(k_rank, (M,)), _INF)
     rows = jnp.argsort(r)[:G]
-    grant = idle[rows] & (jnp.arange(G) < state.C)
     # locality of the grabbed task relative to the grabbing server: the task's
     # replica triple is iid (uniform or chunk-skewed) and independent of
     # everything else, so sampling it at dequeue time is distributionally
@@ -521,6 +575,9 @@ def _fcfs_step(state: FCFSState, sums: RawSums, key, *, cluster, rates, cfg,
     in_rack = (rack_of[locals_g] == rack_of[rows][:, None]).any(axis=1)
     start_cls = jnp.where(is_local, LOCAL,
                           jnp.where(in_rack, RACK, REMOTE)).astype(jnp.int32)
+    # a server whose tier for this task's class is down leaves it queued
+    grant = (idle[rows] & (jnp.arange(G) < state.C)
+             & (speed[rows, start_cls] > 0))
     dur = sample_durations(k_dur, start_cls, rates, cfg.service_dist, cfg.sigma)
     C = state.C - grant.sum().astype(jnp.int32)
     busy = busy.at[rows].set(busy[rows] | grant)
@@ -606,7 +663,7 @@ def _run(key, lam, scen: ScenarioData, *, algo: str, cluster: Cluster,
         k = jax.random.fold_in(key, t)
         measure = t >= cfg.warmup
         in_half2 = t >= half2_from
-        speed = speed_at(scen, t)                       # [M]
+        speed = speed_at(scen, t)                       # [M, 3] per-class
         kw = dict(cluster=cluster, rates=rates, cfg=cfg,
                   lam_t=lam * scen.lam_shape[t], scen=scen, speed=speed,
                   inv_rate_m=inv_rate_matrix(rates, speed),

@@ -1,53 +1,72 @@
-"""Scenario engine: heterogeneous fleets, non-stationary traffic, skewed data.
+"""Scenario engine: composable axes of heterogeneity.
 
-The paper's model (and the seed simulator) is symmetric along every axis the
-paper's *title* is about: all M servers run at the same speed, arrivals are a
+The paper's model (and the seed simulator) is symmetric along every axis
+its *title* is about: all M servers run at the same speed, arrivals are a
 stationary Poisson stream, and each task's replica triple is uniform over
-servers.  This package breaks each symmetry independently and composably,
-so Balanced-Pandas(-Pod) and the JSQ family can be stress-tested where their
-guarantees actually differ:
+servers.  This package breaks each symmetry as an independent **axis
+spec**, and — because real incidents are products, not single axes (a slow
+rack *during* a flash crowd *with* hot data) — makes the axes
+**composable**:
 
   fleet heterogeneity  (``FleetSpec``)
-      Per-server speed multipliers (persistently slow racks / servers) plus
-      time-indexed event windows — straggler onset & recovery, drains and
-      outages (multiplier 0).  A server's effective service *rate* for
-      locality class c at slot t is  rates[c] * speed_t[m]:  an [M, 3] rate
-      matrix that varies over time.
+      Persistent per-server speeds (slow racks, random slow cohorts) plus
+      time-indexed event ``WindowSpec``s.  A window's multiplier is a
+      scalar (whole-server straggler/outage: every tier slows together) or
+      a per-locality-class triple — ``(1.0, 0.4, 0.25)`` scales only the
+      rack-local (beta, ICI) and remote (gamma, DCN) tiers, expressing
+      network congestion that leaves HBM-local service untouched.
+      ``generators.py`` authors correlated patterns as plain window
+      tuples: ``correlated_outages`` (whole-pod failures, power-law
+      durations) and ``cascading_stragglers`` (a sick server drags its
+      rack's beta tier down through the shared ToR — a per-class window).
 
   traffic shape        (``TrafficSpec``)
       Stationary Poisson, 2-state MMPP bursts, diurnal sinusoid, and
-      flash-crowd steps.  Realized host-side as a length-T intensity trace
-      normalized to mean 1, so a requested ``load`` keeps its meaning as a
-      fraction of time-averaged capacity.
+      flash-crowd steps, realized host-side as a length-T mean-1 intensity
+      trace.  Composition multiplies mean-1 shapes and renormalizes
+      (``TrafficProduct``), so ``load`` keeps its meaning as a fraction of
+      time-averaged capacity.
 
   data placement skew  (``PlacementSpec``)
-      Zipf chunk popularity: tasks draw a chunk from a Zipf law and inherit
-      that chunk's fixed replica triple, producing hot local-server triples
-      instead of the seed's uniform ``sample_locals``.
+      Zipf chunk popularity over a fixed replica catalog.  Composition is
+      rightmost-non-uniform-wins — catalogs never union.
 
-Per-server rate model
+The compose() algebra
 ---------------------
-Service durations are still sampled once at service start, in *speed-1 work
-units* at the class rate (geometric / log-normal exactly as before); a busy
-server then completes ``speed_t[m]`` units of work per slot.  For a constant
-speed s this reproduces rate scaling (mean duration 1/(s * rates[c]) slots)
-while also doing the right thing mid-flight: a server that *becomes* a
-straggler slows the task it is already serving — which is what a real
-straggler does — and a drained server (speed 0) freezes, neither finishing
-nor starting work.  The Balanced-Pandas workload metric divides each
-sub-queue by the server's *own current* rate, W_m = sum_c Q[m,c] /
-(speed_t[m] * rates[c]), so routing sees stragglers as long queues.
+``compose(*scenarios, name=...)`` folds scenarios axis-by-axis (each axis
+spec knows how to ``merge`` with its own kind): fleet windows union and
+persistent speeds multiply; traffic shapes multiply; placement picks the
+rightmost skewed law.  The registry's product scenarios (``hetero_storm``,
+``outage_storm``, ``cascade_flash``) are themselves compositions of the
+axis entries, and the benchmark sweep accepts ad-hoc products as
+``--scenarios=slow_rack+flash_crowd``.  ``registry_limits`` reserves
+canonical-padding headroom for pairwise compositions, so any
+``compose(a, b)`` of registry scenarios realizes to the same canonical
+pytree signature as the registry itself and rides the one-compile sweep.
+
+Per-server, per-class rate model
+--------------------------------
+Realization turns windows into an ``[E, M, 3]`` multiplier stack;
+``speed_at`` reduces it to the slot's ``[M, 3]`` speed matrix.  Service
+durations are sampled once at service start, in *speed-1 work units* at
+the class rate; a busy server then completes ``speed_t[m, c]`` units per
+slot for its in-flight class-c task.  A server that *becomes* a straggler
+slows the task it is already serving; a drained server (speed 0) freezes;
+a server whose beta tier is down keeps serving local work.  The
+Balanced-Pandas workload metric divides each sub-queue by the server's own
+current rates, with zero-rate tiers carried as ``+inf`` inverse rates (the
+kernels' contract): they contribute no workload and score ``+inf`` in
+routing, so an empty drained server is never selected.
 
 Capacity under heterogeneity: at the boundary every task is served locally
-at its server's own speed, so the region edge generalizes from M * alpha to
-alpha * sum_m speed_m, time-averaged over the run (``Scenario`` realization
-computes this so ``load`` stays comparable across scenarios).  This edge
-accounts for the *fleet* axis only: placement skew can shrink the true
-stable region further (a hot chunk's triple saturates its three local
-servers and the excess must be served rack-local/remote at beta/gamma), so
-for Zipf scenarios ``load`` is a fraction of the placement-free bound and
-high-load runs may be supercritical — the simulator's ``drift`` metric
-flags that explicitly.  A placement-aware capacity LP is a ROADMAP item.
+at its server's own speed, so the region edge generalizes from M * alpha
+to alpha * sum_m local_speed_m, time-averaged (only the class-0 column of
+the windows matters — beta/gamma-only degradation does not move the
+edge).  This edge accounts for the *fleet* axis only: placement skew can
+shrink the true stable region further, so for Zipf scenarios ``load`` is a
+fraction of the placement-free bound and high-load runs may be
+supercritical — the simulator's ``drift`` metric flags that explicitly.
+A placement-aware capacity LP is a ROADMAP item.
 
 Specs are tiny frozen dataclasses (a registry of named instances lives in
 ``SCENARIOS``); ``realize()`` turns one into a ``ScenarioData`` pytree of
@@ -55,17 +74,21 @@ arrays that the jit'd simulator scans over — nothing in the hot loop
 branches on Python state.
 """
 from .spec import (
+    COMPOSE_DEPTH,
     SCENARIOS,
     FleetSpec,
     PlacementSpec,
     Scenario,
+    TrafficProduct,
     TrafficSpec,
     WindowSpec,
+    compose,
     get_scenario,
     register,
     registry_limits,
     scenario_names,
 )
+from .generators import cascading_stragglers, correlated_outages
 from .build import (
     ScenarioData,
     ScenarioPad,

@@ -29,7 +29,10 @@ class ScenarioData(NamedTuple):
     lam_shape     [T]  arrival-intensity shape, mean ~1 (multiplies lambda)
     base_speed    [M]  persistent per-server speed multipliers
     win_start/end [E]  event-window slot bounds (E may be 0)
-    win_mult      [E, M] per-window speed multiplier (1.0 = unaffected)
+    win_mult      [E, M, 3] per-window, per-locality-class speed multiplier
+                  (1.0 = unaffected).  Whole-server windows carry equal
+                  columns; per-class windows (network-tier degradation,
+                  ToR cascades) scale the beta/gamma columns independently.
     chunk_logits  [C]  log chunk popularity, or None for uniform placement
     chunk_locals  [C, n_replicas] each chunk's replica triple, or None
     placement_on  scalar 0/1 selector, or None.  Canonical (padded)
@@ -99,22 +102,24 @@ def canonical_a_max(cluster: "Cluster", rates: "Rates", cfg, load: float,
 
 
 def speed_at(scen: ScenarioData, t) -> jnp.ndarray:
-    """[M] effective speed at slot ``t`` (jit-safe; t may be traced).
-
-    Windows compose multiplicatively when they overlap."""
+    """[M, 3] effective per-class speed at slot ``t`` (jit-safe; t may be
+    traced).  Column c scales the class-c service rate; whole-server
+    windows carry equal columns.  Windows compose multiplicatively when
+    they overlap."""
     active = (scen.win_start <= t) & (t < scen.win_end)          # [E]
-    mult = jnp.where(active[:, None], scen.win_mult, 1.0)        # [E, M]
-    return scen.base_speed * jnp.prod(mult, axis=0)
+    mult = jnp.where(active[:, None, None], scen.win_mult, 1.0)  # [E, M, 3]
+    return scen.base_speed[:, None] * jnp.prod(mult, axis=0)
 
 
 def speed_trace(scen: ScenarioData, T: int) -> np.ndarray:
-    """[T, M] host-side speed trace (tests / plots; not the hot path)."""
+    """[T, M, 3] host-side speed trace (tests / plots; not the hot path)."""
     start = np.asarray(scen.win_start)[None, :]                  # [1, E]
     end = np.asarray(scen.win_end)[None, :]
     t = np.arange(T)[:, None]                                    # [T, 1]
     active = (start <= t) & (t < end)                            # [T, E]
-    mult = np.where(active[:, :, None], np.asarray(scen.win_mult)[None], 1.0)
-    return np.asarray(scen.base_speed)[None, :] * mult.prod(axis=1)
+    mult = np.where(active[:, :, None, None],
+                    np.asarray(scen.win_mult)[None], 1.0)        # [T, E, M, 3]
+    return np.asarray(scen.base_speed)[None, :, None] * mult.prod(axis=1)
 
 
 # ---------------------------------------------------------------------------
@@ -122,15 +127,29 @@ def speed_trace(scen: ScenarioData, T: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def _check_rack(r: int, cluster: "Cluster", w: WindowSpec) -> None:
+    # loud, not silent: an out-of-range rack would otherwise realize as an
+    # all-False mask — an inert window, i.e. a failure event that never
+    # happens (generators hard-code rack counts; see generators.py)
+    if not 0 <= r < cluster.K:
+        raise ValueError(f"window {w} targets rack {r}, but the cluster "
+                         f"has K={cluster.K} racks")
+
+
 def _window_mask(w: WindowSpec, cluster: "Cluster") -> np.ndarray:
     m = np.arange(cluster.M)
     if w.rack is not None:
+        _check_rack(w.rack, cluster, w)
         return (m // cluster.rack_size) == w.rack
     if w.servers is not None:
         lo, hi = w.servers
         return (m >= lo) & (m < hi)
     if w.every is not None:
         return (m % w.every) == w.phase
+    if w.rack_member is not None:
+        r, i = w.rack_member
+        _check_rack(r, cluster, w)
+        return m == r * cluster.rack_size + (i % cluster.rack_size)
     raise ValueError(f"window {w} selects no servers")
 
 
@@ -140,31 +159,35 @@ def _fleet_arrays(fleet: FleetSpec, cluster: "Cluster", T: int,
     base = np.ones(M, np.float32)
     for r, s in enumerate(fleet.rack_speeds):
         base[r * cluster.rack_size:(r + 1) * cluster.rack_size] = s
-    if fleet.slow_frac > 0.0 and fleet.slow_mult != 1.0:
-        k = max(1, int(round(fleet.slow_frac * M)))
-        base[rng.choice(M, size=k, replace=False)] *= fleet.slow_mult
+    for frac, s_mult in fleet.cohorts():
+        k = max(1, int(round(frac * M)))
+        base[rng.choice(M, size=k, replace=False)] *= s_mult
     E = len(fleet.windows)
     start = np.zeros(E, np.int32)
     end = np.zeros(E, np.int32)
-    mult = np.ones((E, M), np.float32)
+    mult = np.ones((E, M, 3), np.float32)
     for e, w in enumerate(fleet.windows):
         start[e] = int(round(w.t0 * T))
         end[e] = int(round(w.t1 * T))
-        mult[e, _window_mask(w, cluster)] = w.mult
+        mult[e, _window_mask(w, cluster)] = np.asarray(w.class_mult,
+                                                      np.float32)
     return base, start, end, mult
 
 
 def capacity_scale(scen: ScenarioData, T: int) -> float:
-    """Time-averaged sum_m speed_t[m] / M: the heterogeneous capacity region
-    edge relative to the symmetric M * alpha.  Exact — windows make speed
-    piecewise-constant, so integrate over the boundary segments."""
+    """Time-averaged sum_m local_speed_t[m] / M: the heterogeneous capacity
+    region edge relative to the symmetric M * alpha.  At the boundary every
+    task is served locally, so only the LOCAL (alpha, class-0) column of the
+    window multipliers matters — beta/gamma-only degradation leaves the
+    edge untouched.  Exact: windows make speed piecewise-constant, so
+    integrate over the boundary segments."""
     start = np.asarray(scen.win_start)
     end = np.asarray(scen.win_end)
     bounds = np.unique(np.clip(np.concatenate(
         [[0, T], start, end]), 0, T)).astype(np.int64)
     total = 0.0
     base = np.asarray(scen.base_speed, np.float64)
-    mult = np.asarray(scen.win_mult, np.float64)
+    mult = np.asarray(scen.win_mult, np.float64)[:, :, 0]   # local tier
     for lo, hi in zip(bounds[:-1], bounds[1:]):
         if hi <= lo:
             continue
@@ -179,9 +202,9 @@ def capacity_scale(scen: ScenarioData, T: int) -> float:
 # ---------------------------------------------------------------------------
 
 
-def traffic_shape(spec: TrafficSpec, T: int,
-                  rng: np.random.Generator) -> np.ndarray:
-    """[T] float32 intensity shape, normalized to mean 1 over the run."""
+def _shape_one(spec: TrafficSpec, T: int,
+               rng: np.random.Generator) -> np.ndarray:
+    """[T] float64 raw intensity shape of a single factor, clamped >= 0."""
     t = np.arange(T, dtype=np.float64)
     if spec.kind == "stationary":
         shape = np.ones(T)
@@ -206,14 +229,29 @@ def traffic_shape(spec: TrafficSpec, T: int,
                 state = 0
     else:
         raise ValueError(f"unknown traffic kind {spec.kind!r}")
-    # clamp before normalizing: amp > 1 diurnals would otherwise produce
-    # negative intensities (invalid Poisson rates) instead of dead zones
-    shape = np.maximum(shape, 0.0)
+    # clamp before multiplying/normalizing: amp > 1 diurnals would otherwise
+    # produce negative intensities (invalid Poisson rates) instead of dead
+    # zones — and two negative factors must not multiply into spurious load
+    return np.maximum(shape, 0.0)
+
+
+def traffic_shape(spec, T: int, rng: np.random.Generator) -> np.ndarray:
+    """[T] float32 intensity shape, normalized to mean 1 over the run.
+
+    ``spec`` is a TrafficSpec or a TrafficProduct (the compose() merge of
+    several non-trivial shapes): factors are realized left to right against
+    the shared rng and multiplied pointwise, then normalized to mean 1
+    once.  Deterministic factors (stationary / diurnal / flash) therefore
+    compose order-invariantly; stochastic ones (mmpp) consume rng draws in
+    factor order."""
+    shape = np.ones(T, np.float64)
+    for part in (spec.parts or (spec,)):
+        shape = shape * _shape_one(part, T, rng)
     shape = shape / max(shape.mean(), 1e-12)
     return shape.astype(np.float32)
 
 
-def arrival_counts(spec: TrafficSpec, T: int, mean_per_tick: float,
+def arrival_counts(spec, T: int, mean_per_tick: float,
                    seed: int = 0) -> np.ndarray:
     """[T] int64 Poisson arrival counts following the traffic shape — the
     scenario-driven arrival trace the serve engine replays."""
@@ -324,7 +362,7 @@ def realize(scenario: Scenario, cluster: "Cluster", rates: "Rates",
         assert E <= pad.n_windows, (E, pad.n_windows)
         wstart = np.pad(wstart, (0, pad.n_windows - E))
         wend = np.pad(wend, (0, pad.n_windows - E))      # start == end: inert
-        wmult = np.pad(wmult, ((0, pad.n_windows - E), (0, 0)),
+        wmult = np.pad(wmult, ((0, pad.n_windows - E), (0, 0), (0, 0)),
                        constant_values=1.0)
         chunk_logits, chunk_locals, placement_on = _pad_placement(
             chunk_logits, chunk_locals, cluster, pad.n_chunks)

@@ -1,7 +1,39 @@
-"""Scenario specs + the named-scenario registry (see package docstring)."""
+"""Scenario axis specs, the ``compose()`` algebra, and the named registry.
+
+A :class:`Scenario` is a product of three independent *axis specs* —
+:class:`FleetSpec` (who is slow / down, and when), :class:`TrafficSpec`
+(how arrivals breathe), :class:`PlacementSpec` (where the data lives).
+Each axis is **mergeable**: ``axis.merge(other)`` combines two specs of the
+same axis, and :func:`compose` folds whole scenarios together axis-by-axis:
+
+  fleet      event windows union; persistent rack speeds multiply
+             elementwise; slow cohorts accumulate (each drawn
+             independently at realization).
+  traffic    product of the mean-1 intensity shapes, renormalized to
+             mean 1 (a diurnal tide modulating a flash crowd).
+  placement  the rightmost non-uniform placement wins (compose does not
+             union chunk catalogs).
+
+So ``compose("slow_rack", "flash_crowd")`` is a first-class experiment and
+the registry no longer needs a hand-written product scenario per
+combination — the shipped products (``hetero_storm``, ``outage_storm``,
+``cascade_flash``) are themselves registered compositions.
+
+Window multipliers are per locality class: ``WindowSpec.mult`` is either a
+scalar (whole-server slowdown/outage — every tier scales together) or a
+3-tuple ``(local, rack, remote)`` scaling each service tier independently,
+which expresses network-tier degradation (ICI/DCN congestion slows beta and
+gamma service while HBM-local alpha service is untouched) and shared-ToR
+cascades.  Generators for correlated failure patterns (whole-pod outages
+with power-law durations, cascading stragglers) live in ``generators.py``
+and emit plain ``WindowSpec`` tuples, so canonical padding and the
+one-compile sweep are oblivious to how a window list was authored.
+"""
 from __future__ import annotations
 
 import dataclasses
+import functools
+import operator
 from typing import Optional, Union
 
 
@@ -10,32 +42,66 @@ class WindowSpec:
     """A time window during which a set of servers changes speed.
 
     t0/t1 are fractions of the run length T (scenarios are T-agnostic);
-    the affected set is a rack, an [lo, hi) server-id interval, or every
-    f-th server — whichever selector is not None.  mult multiplies the
-    servers' base speed inside the window (0.0 == outage/drain)."""
+    the affected set is a rack, an [lo, hi) server-id interval, every
+    f-th server, or a single rack member — whichever selector is not
+    None.  ``mult`` multiplies the servers' base speed inside the window
+    (0.0 == outage/drain): a scalar applies to all three locality classes
+    (whole-server event), a 3-tuple ``(local, rack, remote)`` scales each
+    service tier independently (network-tier degradation)."""
 
     t0: float
     t1: float
-    mult: float
+    mult: Union[float, tuple]
     rack: Optional[int] = None
     servers: Optional[tuple] = None        # (lo, hi) server-id interval
     every: Optional[int] = None            # servers m with m % every == phase
     phase: int = 0
+    rack_member: Optional[tuple] = None    # (rack, i): server rack*R + i % R
+
+    @property
+    def class_mult(self) -> tuple:
+        """The per-class multiplier triple (scalars broadcast)."""
+        if isinstance(self.mult, (int, float)):
+            return (float(self.mult),) * 3
+        m = tuple(float(x) for x in self.mult)
+        if len(m) != 3:
+            raise ValueError(f"per-class mult needs 3 entries, got {self.mult}")
+        return m
 
 
 @dataclasses.dataclass(frozen=True)
 class FleetSpec:
-    """Persistent per-server speeds + transient event windows."""
+    """Persistent per-server speeds + transient event windows.
+
+    ``slow_frac``/``slow_mult`` name one random slow cohort (kept as the
+    authoring shorthand); ``slow`` carries further ``(frac, mult)`` cohorts
+    accumulated by :meth:`merge`.  ``cohorts()`` is the flattened view the
+    realizer draws from."""
 
     rack_speeds: tuple = ()                # per-rack multiplier ((): all 1.0)
     slow_frac: float = 0.0                 # fraction of servers slowed ...
     slow_mult: float = 1.0                 # ... persistently, by this factor
     windows: tuple = ()                    # of WindowSpec
+    slow: tuple = ()                       # extra (frac, mult) cohorts
+
+    def cohorts(self) -> tuple:
+        head = (((self.slow_frac, self.slow_mult),)
+                if self.slow_frac > 0.0 and self.slow_mult != 1.0 else ())
+        return head + tuple(self.slow)
 
     @property
     def uniform(self) -> bool:
         return (not self.rack_speeds and not self.windows
-                and (self.slow_frac == 0.0 or self.slow_mult == 1.0))
+                and not self.cohorts())
+
+    def merge(self, other: "FleetSpec") -> "FleetSpec":
+        """Union windows, multiply persistent speeds, accumulate cohorts."""
+        n = max(len(self.rack_speeds), len(other.rack_speeds))
+        a = self.rack_speeds + (1.0,) * (n - len(self.rack_speeds))
+        b = other.rack_speeds + (1.0,) * (n - len(other.rack_speeds))
+        return FleetSpec(rack_speeds=tuple(x * y for x, y in zip(a, b)),
+                         windows=self.windows + other.windows,
+                         slow=self.cohorts() + other.cohorts())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +121,45 @@ class TrafficSpec:
     p_enter: float = 0.003                 # quiet -> burst per slot
     p_exit: float = 0.01                   # burst -> quiet per slot
 
+    @property
+    def parts(self) -> tuple:
+        """Non-trivial factors of this shape (stationary is the identity)."""
+        return () if self.kind == "stationary" else (self,)
+
+    def merge(self, other) -> "Traffic":
+        return _traffic_from_parts(self.parts + other.parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficProduct:
+    """Product of several mean-1 intensity shapes, renormalized to mean 1.
+
+    Produced by composing scenarios with non-trivial traffic on both sides;
+    realized by ``build.traffic_shape`` (factors multiply pointwise, then
+    one final mean-1 normalization).  Deterministic factors (diurnal /
+    flash) compose order-invariantly; stochastic factors (mmpp) consume
+    host-rng draws in factor order."""
+
+    factors: tuple                         # of TrafficSpec, each non-trivial
+
+    @property
+    def parts(self) -> tuple:
+        return tuple(self.factors)
+
+    def merge(self, other) -> "Traffic":
+        return _traffic_from_parts(self.parts + other.parts)
+
+
+Traffic = Union[TrafficSpec, TrafficProduct]
+
+
+def _traffic_from_parts(parts: tuple) -> Traffic:
+    if not parts:
+        return TrafficSpec(kind="stationary")
+    if len(parts) == 1:
+        return parts[0]
+    return TrafficProduct(tuple(parts))
+
 
 @dataclasses.dataclass(frozen=True)
 class PlacementSpec:
@@ -64,12 +169,16 @@ class PlacementSpec:
     zipf_s: float = 1.2                    # popularity exponent
     chunks_per_server: int = 4             # catalog size C = this * M
 
+    def merge(self, other: "PlacementSpec") -> "PlacementSpec":
+        """Rightmost non-uniform placement wins (catalogs do not union)."""
+        return other if other.kind != "uniform" else self
+
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     name: str
     fleet: FleetSpec = FleetSpec()
-    traffic: TrafficSpec = TrafficSpec(kind="stationary")
+    traffic: Traffic = TrafficSpec(kind="stationary")
     placement: PlacementSpec = PlacementSpec()
     seed: int = 0                          # host-side realization seed
     description: str = ""
@@ -89,6 +198,46 @@ def scenario_names() -> tuple[str, ...]:
     return tuple(SCENARIOS)
 
 
+def compose(*scenarios, name: Optional[str] = None,
+            seed: Optional[int] = None,
+            description: Optional[str] = None) -> Scenario:
+    """Fold scenarios into one, merging each axis (see module docstring).
+
+    Accepts registered names or Scenario objects.  Fleet windows union and
+    persistent speeds multiply (order-invariant); traffic shapes multiply
+    (order-invariant for deterministic shapes); placement is rightmost-
+    non-uniform-wins (order matters only when several sides are skewed).
+    ``seed`` defaults to the XOR of the parts' seeds — so composing with a
+    seed-0 axis scenario preserves the other side's realization draws —
+    and ``name`` to the parts' names joined with ``+`` (the spelling the
+    benchmark ``--scenarios=`` filter accepts for ad-hoc compositions).
+
+    Canonical-padding note: ``registry_limits`` reserves window slots for
+    compositions of up to two registry scenarios, so any pairwise
+    ``compose`` realizes to the registry's canonical pytree signature;
+    deeper ad-hoc products may need an explicit ``canonical_pad`` over the
+    composed specs.
+    """
+    if not scenarios:
+        raise ValueError("compose() needs at least one scenario")
+    specs = [get_scenario(s) for s in scenarios]
+    merged = lambda axis: functools.reduce(
+        lambda a, b: a.merge(b), (getattr(s, axis) for s in specs))
+    return Scenario(
+        name=name or "+".join(s.name for s in specs),
+        fleet=merged("fleet"),
+        traffic=merged("traffic"),
+        placement=merged("placement"),
+        seed=seed if seed is not None
+        else functools.reduce(operator.xor, (s.seed for s in specs)),
+        description=description or (
+            "composition: " + " x ".join(s.name for s in specs)),
+    )
+
+
+COMPOSE_DEPTH = 2   # pairwise compose() stays on the canonical signature
+
+
 def registry_limits(scenarios=None) -> tuple[int, int]:
     """Registry-wide shape maxima for canonical pytree padding.
 
@@ -97,10 +246,18 @@ def registry_limits(scenarios=None) -> tuple[int, int]:
     turns these into concrete array shapes so every scenario realizes to the
     same pytree signature and the jit'd simulator compiles once for the
     whole sweep.
+
+    The window budget is ``COMPOSE_DEPTH`` x the largest single count, so a
+    ``compose()`` of up to that many registry scenarios — whose windows
+    union — still fits the canonical shapes (pads are inert rows; the cost
+    is a few extra [M, 3] multiplier rows per scenario).  Chunk catalogs
+    need no such headroom: placement merge is rightmost-wins, never a
+    union.
     """
-    specs = tuple(scenarios) if scenarios is not None else tuple(
-        SCENARIOS.values())
-    n_windows = max((len(s.fleet.windows) for s in specs), default=0)
+    specs = tuple(get_scenario(s) for s in scenarios) \
+        if scenarios is not None else tuple(SCENARIOS.values())
+    n_windows = COMPOSE_DEPTH * max(
+        (len(s.fleet.windows) for s in specs), default=0)
     chunks = max((s.placement.chunks_per_server for s in specs
                   if s.placement.kind != "uniform"), default=0)
     return n_windows, chunks
@@ -120,7 +277,8 @@ def get_scenario(s: Union[str, Scenario, None]) -> Scenario:
 
 # ---------------------------------------------------------------------------
 # The named registry.  `uniform` reproduces the seed simulator exactly; each
-# other scenario breaks one axis (or, for the storm, all three).
+# base scenario breaks ONE axis; the product scenarios at the bottom are
+# compose()d from the axis entries instead of re-spelling them.
 # ---------------------------------------------------------------------------
 
 register(Scenario(
@@ -176,11 +334,53 @@ register(Scenario(
     description="Zipf(1.2) chunk popularity: a few replica triples receive "
                 "most of the tasks (hot data)"))
 
+# -- per-class (network-tier) degradation and correlated failures -----------
+# generators.py is imported late so its `from .spec import WindowSpec` sees
+# the classes above while this module is still initializing (no cycle).
+from .generators import cascading_stragglers, correlated_outages  # noqa: E402
+
 register(Scenario(
-    "hetero_storm",
-    fleet=FleetSpec(rack_speeds=(0.5,), windows=(
-        WindowSpec(t0=0.30, t1=0.50, mult=0.25, every=10, phase=0),)),
-    traffic=TrafficSpec(kind="diurnal", amp=0.30, cycles=3.0),
-    placement=PlacementSpec(kind="zipf", zipf_s=1.1),
+    "network_degraded",
+    fleet=FleetSpec(windows=(
+        WindowSpec(t0=0.30, t1=0.70, mult=(1.0, 0.4, 0.25), every=1),)),
+    description="ICI/DCN congestion: rack-local (beta) and remote (gamma) "
+                "tiers drop to 40%/25% fleet-wide for the middle of the "
+                "run; local (alpha) service is untouched"))
+
+register(Scenario(
+    "pod_flap",
+    fleet=FleetSpec(windows=correlated_outages(n_events=3, n_racks=4,
+                                               seed=101)),
+    description="correlated whole-pod failures: rack-wide outages with "
+                "power-law durations (host-seeded generator)"))
+
+register(Scenario(
+    "tor_cascade",
+    fleet=FleetSpec(windows=cascading_stragglers(n_events=2, n_racks=4,
+                                                 seed=202)),
+    description="cascading stragglers: a slow server drags its whole "
+                "rack's beta tier down through the shared ToR"))
+
+# -- product scenarios: compositions of the axis entries above --------------
+
+register(compose(
+    "slow_rack",
+    Scenario("storm_wave", fleet=FleetSpec(windows=(
+        WindowSpec(t0=0.30, t1=0.50, mult=0.25, every=10, phase=0),))),
+    Scenario("storm_tide", traffic=TrafficSpec(kind="diurnal", amp=0.30,
+                                               cycles=3.0)),
+    Scenario("storm_data", placement=PlacementSpec(kind="zipf", zipf_s=1.1)),
+    name="hetero_storm",
     description="all three axes at once: slow rack + straggler cohort + "
                 "diurnal traffic + Zipf placement"))
+
+register(compose(
+    "pod_flap", "mmpp_bursty",
+    name="outage_storm",
+    description="correlated pod failures during bursty (MMPP) traffic"))
+
+register(compose(
+    "tor_cascade", "flash_crowd", "zipf_hotspot",
+    name="cascade_flash",
+    description="shared-ToR straggler cascade under a flash crowd on hot "
+                "(Zipf) data"))

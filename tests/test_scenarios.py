@@ -24,13 +24,18 @@ from repro.core.refsim import simulate_bp_ref
 from repro.scenarios import (
     SCENARIOS,
     FleetSpec,
+    PlacementSpec,
     Scenario,
+    TrafficProduct,
     TrafficSpec,
     WindowSpec,
     arrival_counts,
     canonical_a_max,
     canonical_pad,
     capacity_scale,
+    cascading_stragglers,
+    compose,
+    correlated_outages,
     get_scenario,
     realize,
     sample_locals_scenario,
@@ -66,18 +71,21 @@ def test_speed_windows_compose_and_capacity_is_exact():
     T = 1000
     scen, lam_cap = realize(spec, CLUSTER, RATES, T)
     R = CLUSTER.rack_size
-    s0 = np.asarray(speed_at(scen, 0))
-    assert s0[0] == pytest.approx(0.5) and s0[R] == pytest.approx(1.0)
+    s0 = np.asarray(speed_at(scen, 0))            # [M, 3] per-class speeds
+    assert s0[0] == pytest.approx([0.5] * 3) and s0[R] == pytest.approx([1.0] * 3)
     s_mid = np.asarray(speed_at(scen, 600))       # both windows active
-    assert s_mid[0] == pytest.approx(0.25)        # 0.5 base * 0.5 window
-    assert s_mid[R] == pytest.approx(0.0)         # rack 1 drained
+    assert s_mid[0] == pytest.approx([0.25] * 3)  # 0.5 base * 0.5 window
+    assert s_mid[R] == pytest.approx([0.0] * 3)   # rack 1 drained
     s_end = np.asarray(speed_at(scen, 900))       # recovered
-    assert s_end[0] == pytest.approx(0.5) and s_end[R] == pytest.approx(1.0)
+    assert s_end[0] == pytest.approx([0.5] * 3)
+    assert s_end[R] == pytest.approx([1.0] * 3)
 
-    # capacity_scale integrates the piecewise-constant trace exactly
-    tr = speed_trace(scen, T)                     # [T, M] host oracle
-    assert capacity_scale(scen, T) == pytest.approx(tr.mean(), rel=1e-9)
-    assert lam_cap == pytest.approx(RATES.alpha * CLUSTER.M * tr.mean())
+    # capacity_scale integrates the piecewise-constant LOCAL trace exactly
+    tr = speed_trace(scen, T)                     # [T, M, 3] host oracle
+    assert capacity_scale(scen, T) == pytest.approx(tr[..., 0].mean(),
+                                                    rel=1e-9)
+    assert lam_cap == pytest.approx(RATES.alpha * CLUSTER.M
+                                    * tr[..., 0].mean())
 
 
 def test_uniform_scenario_is_the_seed_model():
@@ -208,7 +216,8 @@ def test_canonical_padding_preserves_scenario_semantics():
     """Padded realization == unpadded realization on everything observable:
     speed traces, capacity edge, traffic shape; pad chunks are never drawn."""
     pad = canonical_pad(CLUSTER)
-    for name in ("uniform", "straggler_wave", "zipf_hotspot", "hetero_storm"):
+    for name in ("uniform", "straggler_wave", "zipf_hotspot", "hetero_storm",
+                 "network_degraded", "cascade_flash"):
         spec = get_scenario(name)
         T = 400
         raw, cap_raw = realize(spec, CLUSTER, RATES, T)
@@ -394,3 +403,291 @@ def test_heterogeneous_simulation_is_stable_at_moderate_load():
     assert np.isfinite(float(r.mean_completion_slots))
     assert float(r.drift) < 1.6
     assert abs(float(r.throughput) / float(r.arrival_rate_hat) - 1) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# compose() algebra
+# ---------------------------------------------------------------------------
+
+
+def _assert_scenario_data_equal(a, b):
+    for x, y in zip(a, b):
+        if x is None:
+            assert y is None
+        else:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_compose_with_uniform_is_identity():
+    """compose(uniform, s) realizes to exactly s's arrays (every axis merge
+    has `uniform` as its identity, and the XOR'd seed preserves s's rng)."""
+    for name in ("slow_rack", "straggler_wave", "mmpp_bursty",
+                 "zipf_hotspot", "network_degraded", "pod_flap"):
+        s = get_scenario(name)
+        c = compose("uniform", s)
+        T = 500
+        a, cap_a = realize(s, CLUSTER, RATES, T)
+        b, cap_b = realize(c, CLUSTER, RATES, T)
+        assert cap_b == pytest.approx(cap_a, rel=1e-12), name
+        _assert_scenario_data_equal(a, b)
+        # and from the left too (all merges treat uniform as identity)
+        d, _ = realize(compose(s, "uniform"), CLUSTER, RATES, T)
+        _assert_scenario_data_equal(a, d)
+
+
+def test_compose_order_invariance_on_deterministic_axes():
+    """Fleet merge (window union, speed product) and deterministic traffic
+    products are order-invariant through realization."""
+    T = 600
+    pairs = [("slow_rack", "straggler_wave"),      # speeds x windows
+             ("slow_rack", "flash_crowd"),         # fleet x traffic
+             ("diurnal_burst", "flash_crowd"),     # deterministic product
+             ("network_degraded", "rack_outage")]  # per-class x outage
+    for na, nb in pairs:
+        ab, cap_ab = realize(compose(na, nb), CLUSTER, RATES, T)
+        ba, cap_ba = realize(compose(nb, na), CLUSTER, RATES, T)
+        assert cap_ab == pytest.approx(cap_ba, rel=1e-9), (na, nb)
+        np.testing.assert_allclose(np.asarray(ab.lam_shape),
+                                   np.asarray(ba.lam_shape), rtol=1e-6)
+        np.testing.assert_allclose(speed_trace(ab, T), speed_trace(ba, T),
+                                   rtol=1e-6)
+
+
+def test_compose_merges_every_axis():
+    c = compose("slow_rack", "flash_crowd", "zipf_hotspot")
+    assert c.name == "slow_rack+flash_crowd+zipf_hotspot"
+    assert c.fleet.rack_speeds == (0.5,)
+    assert c.placement.kind == "zipf"
+    T = 1000
+    scen, lam_cap = realize(c, CLUSTER, RATES, T)
+    lam = np.asarray(scen.lam_shape, np.float64)
+    assert lam.mean() == pytest.approx(1.0, rel=1e-5)
+    # the flash step survives composition (single non-trivial factor)
+    assert lam[int(0.55 * T)] / lam[0] == pytest.approx(2.5, rel=1e-5)
+    assert scen.chunk_locals is not None
+    R = CLUSTER.rack_size
+    want_scale = (0.5 * R + (CLUSTER.M - R)) / CLUSTER.M
+    assert lam_cap == pytest.approx(RATES.alpha * CLUSTER.M * want_scale)
+
+    # persistent speeds multiply elementwise on double composition
+    cc = compose("slow_rack", "slow_rack")
+    assert cc.fleet.rack_speeds == (0.25,)
+
+
+def test_compose_traffic_product_is_renormalized_product():
+    c = compose("diurnal_burst", "flash_crowd")
+    assert isinstance(c.traffic, TrafficProduct)
+    T = 2000
+    rng = np.random.default_rng(0)
+    d = traffic_shape(get_scenario("diurnal_burst").traffic, T, rng)
+    f = traffic_shape(get_scenario("flash_crowd").traffic, T, rng)
+    want = (d.astype(np.float64) * f)
+    want = want / want.mean()
+    got = traffic_shape(c.traffic, T, np.random.default_rng(1))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    assert got.mean() == pytest.approx(1.0, rel=1e-5)
+
+
+def test_compose_rightmost_nonuniform_placement_wins():
+    z15 = Scenario("z15", placement=PlacementSpec(kind="zipf", zipf_s=1.5))
+    assert compose("zipf_hotspot", z15).placement.zipf_s == 1.5
+    assert compose(z15, "zipf_hotspot").placement.zipf_s == 1.2
+    assert compose(z15, "uniform").placement.zipf_s == 1.5  # uniform: no-op
+
+
+def test_mixed_base_and_composed_sweep_shares_one_signature():
+    """Acceptance: compose() of any two registry scenarios realizes to the
+    canonical pytree signature (registry_limits reserves pairwise window
+    headroom), and a mixed base+composed sweep compiles exactly once."""
+    cluster = Cluster(M=16, K=4)
+    rates = Rates(0.05, 0.025, 0.01)
+    cfg = SimConfig(T=88, warmup=24, route_mode="batched", s_max=16)
+    pad = canonical_pad(cluster)
+
+    # worst-case pairwise window union fits the canonical shapes
+    widest = max(SCENARIOS.values(), key=lambda s: len(s.fleet.windows))
+    worst = compose(widest, widest, name="worst_case")
+    uni, _ = realize(get_scenario("uniform"), cluster, rates, cfg.T, pad=pad)
+    com, _ = realize(worst, cluster, rates, cfg.T, pad=pad)
+    assert (jax.tree_util.tree_structure(uni)
+            == jax.tree_util.tree_structure(com))
+    for u, c in zip(uni, com):
+        assert u.shape == c.shape and u.dtype == c.dtype
+
+    composed = [compose("slow_rack", "flash_crowd"),
+                compose("network_degraded", "zipf_hotspot"),
+                compose("straggler_wave", "tor_cascade", name="wave_cascade")]
+    sweep = list(SCENARIOS) + composed
+    a_max = canonical_a_max(cluster, rates, cfg, 0.5,
+                            scenarios=list(SCENARIOS.values()) + composed)
+    reset_trace_count()
+    for s in sweep:
+        r = simulate("balanced_pandas", cluster, rates, 0.5,
+                     jax.random.PRNGKey(0), cfg, scenario=s,
+                     pad=pad, a_max=a_max)
+        assert np.isfinite(float(r.mean_tasks_in_system)), s
+    assert trace_count() == 1, f"mixed sweep retraced: {trace_count()}"
+
+
+# ---------------------------------------------------------------------------
+# per-class (network-tier) windows + correlated-failure generators
+# ---------------------------------------------------------------------------
+
+
+def test_network_degraded_scales_only_beta_gamma():
+    T = 1000
+    scen, lam_cap = realize(get_scenario("network_degraded"), CLUSTER,
+                            RATES, T)
+    s = np.asarray(speed_at(scen, T // 2))        # inside the window
+    np.testing.assert_allclose(s[:, 0], 1.0)
+    np.testing.assert_allclose(s[:, 1], 0.4, rtol=1e-6)
+    np.testing.assert_allclose(s[:, 2], 0.25, rtol=1e-6)
+    s_out = np.asarray(speed_at(scen, 0))         # outside
+    np.testing.assert_allclose(s_out, 1.0)
+    # the capacity edge is local-service-bound: beta/gamma-only degradation
+    # must not move it
+    _, lam_uni = realize(get_scenario("uniform"), CLUSTER, RATES, T)
+    assert lam_cap == pytest.approx(lam_uni, rel=1e-12)
+
+
+def test_out_of_range_rack_selector_is_loud():
+    """A window targeting a rack the cluster doesn't have must raise at
+    realization, not silently become an inert no-op event."""
+    for w in (WindowSpec(t0=0.1, t1=0.2, mult=0.0, rack=CLUSTER.K),
+              WindowSpec(t0=0.1, t1=0.2, mult=0.5,
+                         rack_member=(CLUSTER.K, 0))):
+        with pytest.raises(ValueError, match="targets rack"):
+            realize(Scenario("bad", fleet=FleetSpec(windows=(w,))),
+                    CLUSTER, RATES, 100)
+
+
+def test_correlated_outages_generator():
+    ws = correlated_outages(n_events=5, n_racks=4, seed=7)
+    assert ws == correlated_outages(n_events=5, n_racks=4, seed=7)
+    assert ws != correlated_outages(n_events=5, n_racks=4, seed=8)
+    assert len(ws) == 5
+    for w in ws:
+        assert w.mult == 0.0 and 0 <= w.rack < 4
+        assert 0.0 <= w.t0 < w.t1 <= 1.0
+        assert w.class_mult == (0.0, 0.0, 0.0)    # whole-pod drain
+        assert 0.02 * 0.999 <= w.t1 - w.t0 <= 0.20 + 1e-9
+
+
+def test_cascading_stragglers_generator_and_realization():
+    ws = cascading_stragglers(n_events=3, n_racks=4, seed=5)
+    assert len(ws) == 6                            # straggler + ToR per event
+    scen, _ = realize(Scenario("cg", fleet=FleetSpec(windows=ws)),
+                      CLUSTER, RATES, 1000)
+    wm = np.asarray(scen.win_mult)                 # [6, M, 3]
+    R = CLUSTER.rack_size
+    for e, (a, b) in enumerate(zip(ws[::2], ws[1::2])):
+        assert a.rack_member is not None and a.rack_member[0] == b.rack
+        assert (a.t0, a.t1) == (b.t0, b.t1)
+        # straggler window: exactly one server, all tiers slowed
+        hit = np.where((wm[2 * e] != 1.0).any(axis=1))[0]
+        assert len(hit) == 1 and hit[0] // R == b.rack
+        np.testing.assert_allclose(wm[2 * e, hit[0]], 0.25)
+        # cascade window: the whole rack's beta tier only
+        hit2 = np.where((wm[2 * e + 1] != 1.0).any(axis=1))[0]
+        assert len(hit2) == R and (hit2 // R == b.rack).all()
+        np.testing.assert_allclose(wm[2 * e + 1, hit2[0]], [1.0, 0.5, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# +inf zero-rate contract (the old finite sentinel absorbed tasks)
+# ---------------------------------------------------------------------------
+
+
+def test_drained_empty_server_scores_inf_not_zero():
+    from repro.core import pod_candidates, route_pod_candidates, weighted_score
+
+    speed = np.ones((CLUSTER.M, 3), np.float32)
+    speed[0] = 0.0                                 # server 0 fully drained
+    inv_m = inv_rate_matrix(RATES, jnp.asarray(speed))
+    assert not np.isfinite(np.asarray(inv_m)[0]).any()
+
+    # the contract primitive: 0 workload x inf inverse rate -> inf, not NaN
+    s = np.asarray(weighted_score(jnp.zeros(3), np.asarray(inv_m)[0]))
+    assert np.isinf(s).all() and not np.isnan(s).any()
+
+    # full-BP routing over an EMPTY fleet: a task local to the dead server
+    # must route to a live replica (the ROADMAP bug: the finite sentinel
+    # made the dead server score 0 and absorb one task per outage window)
+    W = jnp.zeros(CLUSTER.M)
+    locals_ = jnp.asarray([[0, 1, 2]], jnp.int32)
+    cls = locality_class(CLUSTER, locals_)
+    tie = jax.random.uniform(jax.random.PRNGKey(0), (CLUSTER.M,))
+    sel, sel_cls = route_balanced_pandas_full(W, cls, inv_m, tie)
+    assert int(sel[0]) in (1, 2)                   # live locals win
+    assert int(sel_cls[0]) == 0
+
+    # pod routing with the dead server in the candidate list
+    key = jax.random.PRNGKey(1)
+    ci, cc, cv = pod_candidates(key, CLUSTER, locals_, cls, PodSpec(2, 4))
+    sel_p, _ = route_pod_candidates(key, W, ci, cc, cv, inv_m)
+    assert int(sel_p[0]) != 0
+
+
+def test_outage_window_does_not_absorb_tasks_end_to_end():
+    """During a whole-rack drain the dead rack's queues must stay empty
+    under BP routing (no task is ever routed to a drained server)."""
+    cfg = SimConfig(T=2_000, warmup=200)
+    spec = Scenario("drain", fleet=FleetSpec(windows=(
+        WindowSpec(t0=0.0, t1=1.0, mult=0.0, rack=0),)))
+    r = simulate("balanced_pandas", CLUSTER, RATES, 0.4,
+                 jax.random.PRNGKey(2), cfg, scenario=spec)
+    # Little's-law N stays finite and the run is stable: the drained rack
+    # absorbed nothing (absorbed tasks would never complete -> drift >> 1)
+    assert np.isfinite(float(r.mean_tasks_in_system))
+    assert float(r.drift) < 1.5
+    assert float(r.throughput) / float(r.arrival_rate_hat) > 0.9
+
+
+# ---------------------------------------------------------------------------
+# refsim vs JAX on a per-class-window scenario
+# ---------------------------------------------------------------------------
+
+
+def test_refsim_and_jax_agree_on_per_class_windows():
+    """Event-accurate numpy oracle vs the vectorized simulator with beta
+    and gamma tiers at half speed fleet-wide (a full-run per-class window
+    on the JAX side, a constant [M, 3] speed matrix on the refsim side):
+    mean task count within 5%."""
+    spec = Scenario("nd_const", fleet=FleetSpec(windows=(
+        WindowSpec(t0=0.0, t1=1.0, mult=(1.0, 0.5, 0.5), every=1),)))
+    speed = np.ones((CLUSTER.M, 3))
+    speed[:, 1:] = 0.5
+
+    # load 0.45: with halved beta/gamma the chain mixes slowly above ~0.5
+    # (stationary N is large and warmup-dominated on both sides); at 0.45
+    # relaxation is fast and the 5% bar is several sigma for these seeds
+    T, warmup, load = 12_000, 3_000, 0.45
+    ref = np.mean([simulate_bp_ref(CLUSTER, RATES, load, T=T, warmup=warmup,
+                                   seed=s, speed=speed).mean_tasks_in_system
+                   for s in range(3)])
+    cfg = SimConfig(T=T, warmup=warmup)
+    jaxN = np.mean([float(simulate("balanced_pandas", CLUSTER, RATES, load,
+                                   jax.random.PRNGKey(s), cfg,
+                                   scenario=spec).mean_tasks_in_system)
+                    for s in range(6)])
+    assert abs(jaxN - ref) / ref < 0.05, (jaxN, ref)
+
+
+# ---------------------------------------------------------------------------
+# batched BP path through the Pallas kernels
+# ---------------------------------------------------------------------------
+
+
+def test_batched_kernel_path_agrees_with_sequential_on_hetero():
+    """The route_mode="batched" BP path now calls pod_route /
+    weighted_argmin directly; on a slow-rack fleet it must agree with the
+    sequential plain-JAX path at the same tolerance the homogeneous
+    batched-vs-sequential test uses."""
+    cfg_s = SimConfig(T=6_000, warmup=1_500)
+    cfg_b = SimConfig(T=6_000, warmup=1_500, route_mode="batched")
+    for algo in ("balanced_pandas", "balanced_pandas_pod"):
+        a = float(simulate(algo, CLUSTER, RATES, 0.6, jax.random.PRNGKey(3),
+                           cfg_s, scenario="slow_rack").mean_completion_slots)
+        b = float(simulate(algo, CLUSTER, RATES, 0.6, jax.random.PRNGKey(3),
+                           cfg_b, scenario="slow_rack").mean_completion_slots)
+        assert abs(a - b) / a < 0.25, (algo, a, b)
