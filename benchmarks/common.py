@@ -18,6 +18,7 @@ from repro.core import (  # noqa: E402
     SimConfig,
     simulate_grid,
 )
+from repro.telemetry import format_clip_warning  # noqa: E402
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
@@ -95,19 +96,27 @@ def run_figure(preset: Preset, loads, service_dist: str, name: str,
     cfg = dataclasses.replace(preset.cfg, service_dist=service_dist)
     rows = {}
     timing = {}
+    clip_cells = []
     for algo in algos:
         t0 = time.time()
         res = simulate_grid(algo, preset.cluster, preset.rates, list(loads),
                             preset.n_seeds, cfg)
         t = np.asarray(res.mean_completion_norm)       # [seeds, loads]
         drift = np.asarray(res.drift)
+        clip = np.asarray(res.clip_fraction).mean(axis=0)
         rows[algo] = {
             "mean": t.mean(axis=0).tolist(),
             "sem": (t.std(axis=0) / max(np.sqrt(t.shape[0]), 1)).tolist(),
             "drift": drift.mean(axis=0).tolist(),
             "locality": np.asarray(res.locality_fractions).mean(axis=0).tolist(),
+            "clip_fraction": clip.tolist(),
         }
+        clip_cells += [(f"{name}/{algo}@rho={l}", float(c))
+                       for l, c in zip(loads, clip)]
         timing[algo] = time.time() - t0
+    warn = format_clip_warning(clip_cells)
+    if warn:
+        print(warn)
     out = {"figure": name, "preset": preset.name, "loads": list(loads),
            "service_dist": service_dist, "algos": rows,
            "wall_s": timing}

@@ -1,0 +1,128 @@
+"""Routing-throughput benchmark + probe-quality d-sweep -> BENCH_router.json.
+
+Two measurements, both appended as one datapoint to the repo-root
+``BENCH_router.json`` trajectory (PR-over-PR perf tracking — the ROADMAP's
+fused-router megakernel work will be judged against this file):
+
+  1. **Throughput**: steady-state wall-clock of the jit'd simulator on the
+     batched (Pallas-kernel) routing path, reported as simulated slots/s
+     and routing decisions/s per algorithm.  The first call pays the
+     compile; the timed call rides the jit cache, so the number tracks the
+     kernel + scan step itself.
+
+  2. **Probe quality vs d** (telemetry): mean routing regret (chosen score
+     minus the O(M) oracle's) for BP-Pod and JSQ-MW-Pod across probe
+     budgets d in {3, 8, 16}.  The paper's d-sensitivity claim, as a
+     direct observable: BP-Pod's regret curve is flat in d; JSQ-MW-Pod's
+     is not.  ``flatness`` = regret(d=3) / regret(d=16) — near 1 is flat.
+
+Usage: PYTHONPATH=src python benchmarks/router_bench.py [--preset=smoke]
+"""
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from common import preset_from_argv
+
+from repro.core import (PodSpec, simulate_grid, simulate_grid_with_telemetry,
+                        trace_count)
+from repro.telemetry import TelemetryConfig, probe_summary
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_router.json")
+
+ALGOS = ("balanced_pandas", "balanced_pandas_pod", "jsq_maxweight_pod")
+D_SWEEP = (PodSpec(1, 2), PodSpec(2, 6), PodSpec(4, 12))
+
+
+def _throughput(preset) -> dict:
+    """Slots/s and routing decisions/s on the batched kernel path."""
+    cfg = dataclasses.replace(preset.cfg, route_mode="batched")
+    out = {}
+    for algo in ALGOS:
+        args = (algo, preset.cluster, preset.rates, [preset.fixed_load],
+                preset.n_seeds, cfg)
+        res = simulate_grid(*args)                      # compile + warm
+        np.asarray(res.mean_tasks_in_system)            # block
+        t0 = time.time()
+        res = simulate_grid(*args)
+        decisions = float(np.asarray(res.route_decisions).sum())
+        np.asarray(res.mean_tasks_in_system)
+        wall = time.time() - t0
+        slots = cfg.T * preset.n_seeds
+        out[algo] = {
+            "wall_s": wall,
+            "slots_per_s": slots / max(wall, 1e-9),
+            "route_decisions_per_s": decisions / max(wall, 1e-9),
+        }
+        print(f"[router_bench] {algo:22s} {slots / max(wall, 1e-9):12.0f} "
+              f"slots/s  {decisions / max(wall, 1e-9):12.0f} decisions/s")
+    return out
+
+
+def _probe_quality(preset) -> dict:
+    """Mean probe rank / regret per (pod algo, d) — flat in d for BP-Pod."""
+    tcfg = TelemetryConfig(sojourns=False)   # probes only: cheaper
+    out = {}
+    for algo in ("balanced_pandas_pod", "jsq_maxweight_pod"):
+        by_d = {}
+        for pod in D_SWEEP:
+            _, tele = simulate_grid_with_telemetry(
+                algo, preset.cluster, preset.rates, [preset.fixed_load],
+                preset.n_seeds, preset.cfg, pod=pod, telemetry=tcfg)
+            by_d[pod.d] = probe_summary(tele)
+        r_small = by_d[min(by_d)]["mean_regret"]
+        r_large = by_d[max(by_d)]["mean_regret"]
+        flat = (r_small / max(r_large, 1e-12)
+                if r_small is not None and r_large is not None else None)
+        out[algo] = {"by_d": {str(d): s for d, s in by_d.items()},
+                     "flatness": flat}
+        cells = "  ".join(
+            f"d={d}: {s['mean_regret']:.4f}" if s["mean_regret"] is not None
+            else f"d={d}: n/a" for d, s in sorted(by_d.items()))
+        msg = f"[router_bench] regret {algo:22s} {cells}"
+        if flat is not None:
+            msg += f"  flatness(d3/d16) {flat:.2f}"
+        print(msg)
+    return out
+
+
+def _append_datapoint(point: dict) -> None:
+    data = {"schema": 1, "runs": []}
+    if os.path.exists(BENCH_PATH):
+        try:
+            with open(BENCH_PATH) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            pass
+    data.setdefault("runs", []).append(point)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+
+
+def main(preset=None):
+    p = preset or preset_from_argv()
+    throughput = _throughput(p)
+    probes = _probe_quality(p)
+    point = {
+        "date": time.strftime("%Y-%m-%d"),
+        "preset": p.name,
+        "M": p.cluster.M, "K": p.cluster.K,
+        "T": p.cfg.T, "n_seeds": p.n_seeds, "load": p.fixed_load,
+        "route_mode": "batched",
+        "trace_count": trace_count(),
+        "throughput": throughput,
+        "probe_quality": probes,
+    }
+    _append_datapoint(point)
+    print(f"[router_bench] appended datapoint -> {BENCH_PATH}")
+    return point
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ import fig6_highload_logn
 import fig7_fixedload_logn
 import locality
 import roofline_table
+import router_bench
 import scenarios as scenarios_suite
 from common import preset_from_argv
 
@@ -43,6 +44,12 @@ def _headline(name, out):
             done = [r for r in out if isinstance(r, dict)
                     and "skipped" not in r]
             return f"{len(done)} cells"
+        if name == "router_bench":
+            tp = out["throughput"]["balanced_pandas_pod"]
+            bp_f = out["probe_quality"]["balanced_pandas_pod"]["flatness"]
+            mw_f = out["probe_quality"]["jsq_maxweight_pod"]["flatness"]
+            return (f"BP-Pod {tp['slots_per_s']:.0f} slots/s; regret "
+                    f"flatness BP-Pod {bp_f:.2f} vs JSQ-MW-Pod {mw_f:.2f}")
         if name == "scenarios":
             import numpy as np
             rows = out["scenarios"]
@@ -73,6 +80,7 @@ def main() -> None:
         ("fig7_fixedload_logn", fig7_fixedload_logn.main),
         ("locality", locality.main),
         ("scenarios", scenarios_suite.main),
+        ("router_bench", router_bench.main),
         ("complexity", complexity.main),
         ("balls_and_bins", balls_and_bins.main),
         ("roofline", roofline_table.main),

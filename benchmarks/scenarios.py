@@ -23,6 +23,15 @@ scenarios.compose of the two): the registry pad reserves pairwise window
 headroom, so ad-hoc pairs stay on the registry's compiled signature (the
 shared a_max is widened over the selection when a composition's traffic
 peak exceeds the registry's).
+
+``--metrics-out=FILE`` turns on the in-jit telemetry collectors
+(repro.telemetry; one shared TelemetryConfig keeps the one-compile
+property) and writes the full JSONL event stream — per-cell run manifest,
+per-window rows, histograms, sojourn percentiles — to FILE.  Cells then
+also report windowed drift (telemetry-ring upgrade of the half2/half1
+ratio), sojourn p50/p95/p99, and pod probe quality (mean rank / routing
+regret vs the O(M) oracle — the observable behind the paper's
+d-sensitivity claim).
 """
 import sys
 import time
@@ -31,8 +40,13 @@ import numpy as np
 
 from common import Preset, preset_from_argv, save_artifact
 
-from repro.core import PodSpec, simulate_grid
+from repro.core import (PodSpec, simulate_grid, simulate_grid_with_telemetry,
+                        trace_count)
 from repro.scenarios import SCENARIOS, canonical_a_max, canonical_pad, compose
+from repro.telemetry import (TelemetryConfig, format_clip_warning,
+                             probe_summary, run_manifest,
+                             sojourn_percentiles, to_events, windowed_drift,
+                             write_jsonl)
 
 ALGOS = ("balanced_pandas", "balanced_pandas_pod", "jsq_maxweight_pod")
 
@@ -41,19 +55,52 @@ ALGOS = ("balanced_pandas", "balanced_pandas_pod", "jsq_maxweight_pod")
 D_SWEEP = (PodSpec(1, 2), PodSpec(2, 6), PodSpec(4, 12))
 
 
+def _metrics_out_path():
+    for a in sys.argv[1:]:
+        if a.startswith("--metrics-out="):
+            return a.split("=", 1)[1]
+    return None
+
+
 def _mean_T(preset: Preset, algo: str, scenario, pod=None,
-            pad=None, a_max=None) -> dict:
-    """scenario: a registered name or a Scenario (ad-hoc composition)."""
-    res = simulate_grid(algo, preset.cluster, preset.rates,
-                        [preset.fixed_load], preset.n_seeds, preset.cfg,
-                        pod=pod, scenario=scenario, pad=pad, a_max=a_max)
+            pad=None, a_max=None, tcfg=None, sink=None, label=None) -> dict:
+    """scenario: a registered name or a Scenario (ad-hoc composition).
+
+    With ``tcfg`` the run collects telemetry: the returned row gains
+    drift_windowed / sojourn / probe fields and the cell's JSONL events are
+    appended to ``sink`` (a list)."""
+    t0 = time.time()
+    if tcfg is None:
+        res = simulate_grid(algo, preset.cluster, preset.rates,
+                            [preset.fixed_load], preset.n_seeds, preset.cfg,
+                            pod=pod, scenario=scenario, pad=pad, a_max=a_max)
+        tele = None
+    else:
+        res, tele = simulate_grid_with_telemetry(
+            algo, preset.cluster, preset.rates, [preset.fixed_load],
+            preset.n_seeds, preset.cfg, pod=pod, scenario=scenario, pad=pad,
+            a_max=a_max, telemetry=tcfg)
     t = np.asarray(res.mean_completion_norm)       # [seeds, 1]
-    return {
+    row = {
         "mean": float(np.nanmean(t)),
         "sem": float(np.nanstd(t) / max(np.sqrt(t.shape[0]), 1)),
         "drift": float(np.asarray(res.drift).mean()),
         "local_frac": float(np.asarray(res.locality_fractions)[..., 0].mean()),
+        "clip_fraction": float(np.asarray(res.clip_fraction).mean()),
     }
+    if tele is not None:
+        cfg = preset.cfg
+        row["drift_windowed"] = windowed_drift(tele, tcfg, cfg.T, cfg.warmup)
+        row["sojourn"] = sojourn_percentiles(tele, tcfg)
+        row["probe"] = probe_summary(tele)
+        if sink is not None:
+            sink.extend(to_events(tele, tcfg, cfg.T, cfg.warmup, run_manifest(
+                suite="scenarios", scenario=label, algo=algo,
+                d=(pod.d if pod is not None else None),
+                load=preset.fixed_load, seeds=preset.n_seeds, T=cfg.T,
+                warmup=cfg.warmup, wall_s=time.time() - t0,
+                trace_count=trace_count())))
+    return row
 
 
 def _selected_scenarios() -> dict:
@@ -90,19 +137,25 @@ def main(preset=None):
         pad = pad._replace(n_windows=need)
     a_max = canonical_a_max(p.cluster, p.rates, p.cfg, p.fixed_load,
                             scenarios=list(SCENARIOS.values()) + extra)
+    metrics_out = _metrics_out_path()
+    tcfg = TelemetryConfig() if metrics_out else None
+    sink = [] if metrics_out else None
     rows = {}
     for name, scen in selected.items():
         t0 = time.time()
+        label = name if isinstance(name, str) else str(name)
         row = {"description": scen.description, "algos": {}}
         d_means = {pod.d: _mean_T(p, "balanced_pandas_pod", scen, pod=pod,
-                                  pad=pad, a_max=a_max)
+                                  pad=pad, a_max=a_max, tcfg=tcfg,
+                                  sink=sink, label=label)
                    for pod in D_SWEEP}
         for algo in ALGOS:
             # the d=8 sweep cell IS BP-Pod at its default PodSpec(2, 6)
             # with the same seeds — reuse instead of re-simulating
             row["algos"][algo] = (d_means[8] if algo == "balanced_pandas_pod"
-                                  else _mean_T(p, algo, scen,
-                                               pad=pad, a_max=a_max))
+                                  else _mean_T(p, algo, scen, pad=pad,
+                                               a_max=a_max, tcfg=tcfg,
+                                               sink=sink, label=label))
         d_small, d_large = min(d_means), max(d_means)
         row["d_sweep"] = {str(d): m for d, m in d_means.items()}
         row["sensitivity_d"] = (
@@ -118,12 +171,28 @@ def main(preset=None):
               f"JSQ-MW-Pod {row['algos']['jsq_maxweight_pod']['mean']:8.2f}  "
               f"d-sens {row['sensitivity_d']:+.1%}  "
               f"[{row['wall_s']:.1f}s]")
+        if tcfg is not None:
+            regret = {d: m["probe"]["mean_regret"]
+                      for d, m in d_means.items()}
+            print("            probe regret (BP-Pod): " + "  ".join(
+                f"d={d}: {r:.4f}" if r is not None else f"d={d}: n/a"
+                for d, r in sorted(regret.items())))
 
     out = {"figure": "scenarios", "preset": p.name, "load": p.fixed_load,
            "algos": list(ALGOS), "d_values": [pod.d for pod in D_SWEEP],
            "scenarios": rows}
     save_artifact("scenarios", out)
     _print_table(out)
+    # loud clip surfacing: silent arrival truncation biases measured loads
+    warn = format_clip_warning(
+        [(f"{n}/{a}", r.get("clip_fraction", 0.0))
+         for n, row in rows.items() for a, r in row["algos"].items()])
+    if warn:
+        print(warn)
+    if metrics_out:
+        write_jsonl(metrics_out, sink, append=False)
+        print(f"[scenarios] wrote {len(sink)} telemetry events "
+              f"-> {metrics_out}")
     return out
 
 
@@ -135,7 +204,10 @@ def _print_table(out: dict):
     for name, row in out["scenarios"].items():
         a = row["algos"]
         def cell(r):
-            return f"{r['mean']:8.2f}{'*' if r['drift'] > 1.5 else ' '}"
+            # prefer the windowed (telemetry-ring) drift when collected
+            d = r.get("drift_windowed")
+            d = r["drift"] if d is None or d != d else d
+            return f"{r['mean']:8.2f}{'*' if d > 1.5 else ' '}"
         print(f"{name:16s} {cell(a['balanced_pandas'])} "
               f"{cell(a['balanced_pandas_pod'])} "
               f"{cell(a['jsq_maxweight_pod']):>11s} "

@@ -1,0 +1,46 @@
+"""Validate a telemetry JSONL event stream against the export schema.
+
+Usage: PYTHONPATH=src python scripts/validate_telemetry.py FILE [FILE...]
+
+Exit 0 when every file parses and passes ``telemetry.validate_events``;
+exit 1 (listing the errors) otherwise.  CI runs this over the scenario
+sweep's ``--metrics-out`` output so a schema drift fails the build instead
+of silently corrupting downstream dashboards.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.telemetry import read_jsonl, validate_events  # noqa: E402
+
+
+def main(argv) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    failed = False
+    for path in argv:
+        try:
+            events = read_jsonl(path)
+        except Exception as e:
+            print(f"{path}: UNREADABLE ({e})")
+            failed = True
+            continue
+        errors = validate_events(events)
+        if errors:
+            failed = True
+            print(f"{path}: {len(errors)} schema error(s)")
+            for err in errors[:20]:
+                print(f"  - {err}")
+        else:
+            kinds = {}
+            for e in events:
+                kinds[e["event"]] = kinds.get(e["event"], 0) + 1
+            summary = ", ".join(f"{k}={n}" for k, n in sorted(kinds.items()))
+            print(f"{path}: OK ({len(events)} events: {summary})")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -28,6 +28,7 @@ class RefResult:
     mean_tasks_in_system: float
     n_completed: int
     locality_fractions: np.ndarray
+    sojourns: np.ndarray | None = None   # exact per-task sojourn slots
 
 
 def _locality(cluster: Cluster, locals_: np.ndarray) -> np.ndarray:
@@ -143,4 +144,5 @@ def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
         mean_tasks_in_system=sum_N / max(n_slots_measured, 1),
         n_completed=len(sojourns),
         locality_fractions=start_cls_counts / max(start_cls_counts.sum(), 1),
+        sojourns=np.asarray(sojourns, np.int64),
     )

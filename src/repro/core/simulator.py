@@ -89,6 +89,7 @@ from .cluster import (
 )
 from ..kernels import pod_route as kernel_pod_route
 from ..kernels import weighted_argmin as kernel_weighted_argmin
+from ..telemetry import collectors as tlm
 from ..scenarios.build import (
     ScenarioData,
     realize,
@@ -99,6 +100,7 @@ from ..scenarios.spec import get_scenario
 from .policies import (
     PodSpec,
     bp_candidates_per_route,
+    inv_rate_for,
     jsqmw_candidates_per_schedule,
     lex_argmax,
     lex_argmin,
@@ -108,6 +110,7 @@ from .policies import (
     route_pod_candidates,
     sample_rack_peer,
     sample_remote_peer,
+    weighted_score,
 )
 
 _INF = jnp.inf
@@ -286,7 +289,8 @@ def _bp_schedule(key, Q, busy, rem, cls, rates, service_dist, sigma,
     information — no cross-server messages (paper §IV-A).
     servable: bool [M, 3] (speed > 0) — a drained server starts nothing;
     a server whose beta tier is down skips rack-local work but still
-    starts local/remote tasks."""
+    starts local/remote tasks.  Also returns (pick, start) so the
+    telemetry sojourn ring can mirror the queue pops."""
     has = (Q > 0) & servable
     pick = jnp.argmax(has, axis=1).astype(jnp.int32)   # first servable class
     start = (~busy) & has.any(axis=1)
@@ -297,12 +301,23 @@ def _bp_schedule(key, Q, busy, rem, cls, rates, service_dist, sigma,
     cls = jnp.where(start, pick, cls)
     starts_by_class = (jax.nn.one_hot(pick, 3, dtype=jnp.float32)
                        * start[:, None].astype(jnp.float32)).sum(axis=0)
-    return Q, busy, rem, cls, starts_by_class, start.sum().astype(jnp.float32)
+    return (Q, busy, rem, cls, starts_by_class,
+            start.sum().astype(jnp.float32), pick, start)
+
+
+def _full_bp_scores(W, cls_arr, inv_rates):
+    """[..., M] weighted-workload score of EVERY server for each arrival —
+    what the O(M) policy would examine (telemetry probe-quality oracle)."""
+    m = jnp.arange(cls_arr.shape[-1], dtype=jnp.int32)
+    return weighted_score(W, inv_rate_for(inv_rates, m, cls_arr))
 
 
 def _bp_route_batch(key, cluster, Q, cls_arr, locals_, mask, inv_rates, pod,
-                    sequential: bool, class_tiebreak: bool = True):
-    """Route a slot's arrival batch; returns (Q', sel_cls [A]).
+                    sequential: bool, class_tiebreak: bool = True,
+                    tcfg=None):
+    """Route a slot's arrival batch; returns (Q', sel [A], sel_cls [A],
+    probe) where probe = (rank_sum, regret_sum, n_decisions) telemetry
+    (zeros when ``tcfg`` is None or probe collection is off).
 
     sequential: per-arrival plain-JAX routing, each arrival seeing the
     previous one's queues (the paper's model; random tie-breaks).
@@ -312,6 +327,8 @@ def _bp_route_batch(key, cluster, Q, cls_arr, locals_, mask, inv_rates, pod,
     sequential-path knob; kernel ties resolve by candidate order)."""
     k_tie, k_pod, k_seq = jax.random.split(key, 3)
     tie_rnd = jax.random.uniform(k_tie, (cluster.M,))
+    collect = tcfg is not None and tcfg.probes
+    probe = tlm.ZERO_PROBE
 
     if sequential:
         def route_one(Qc, xs):
@@ -325,9 +342,22 @@ def _bp_route_batch(key, cluster, Q, cls_arr, locals_, mask, inv_rates, pod,
                 ci, cc, cv = pod_candidates(kc, cluster, loc_a, cls_a, pod)
                 sel, sc = route_pod_candidates(kt, W, ci, cc, cv, inv_rates)
             Qc = Qc.at[sel, sc].add(valid.astype(jnp.int32))
-            return Qc, sc
+            if collect:
+                full = _full_bp_scores(W, cls_a, inv_rates)
+                return Qc, (sel, sc, full[sel], jnp.min(full),
+                            (full < full[sel]).sum())
+            return Qc, (sel, sc)
         keys = jax.random.split(k_seq, mask.shape[0])
-        Q, sel_cls = jax.lax.scan(route_one, Q, (cls_arr, locals_, mask, keys))
+        Q, ys = jax.lax.scan(route_one, Q, (cls_arr, locals_, mask, keys))
+        if collect:
+            sel, sel_cls, chosen, best, rank = ys
+            regret = jnp.where(jnp.isfinite(chosen - best), chosen - best,
+                               0.0)
+            v = mask.astype(jnp.float32)
+            probe = ((rank * v).sum(), (jnp.maximum(regret, 0.0) * v).sum(),
+                     v.sum())
+        else:
+            sel, sel_cls = ys
     else:
         W = _bp_workload(Q, inv_rates)
         if pod is None:
@@ -339,27 +369,39 @@ def _bp_route_batch(key, cluster, Q, cls_arr, locals_, mask, inv_rates, pod,
             sel, _ = kernel_pod_route(W, ci, cc, cv, inv_rates)
         sel_cls = jnp.take_along_axis(cls_arr, sel[:, None], axis=1)[:, 0]
         Q = Q.at[sel, sel_cls].add(mask.astype(jnp.int32))
-    return Q, sel_cls
+        if collect:
+            full = _full_bp_scores(W[None, :], cls_arr, inv_rates)  # [A, M]
+            chosen = jnp.take_along_axis(full, sel[:, None], axis=1)[:, 0]
+            probe = tlm.probe_stats_min(full, chosen, mask)
+    return Q, sel, sel_cls, probe
 
 
 def _bp_step(state: BPState, sums: RawSums, key, *, cluster, rates, cfg,
              lam_t, scen, speed, inv_rate_m, pod, a_max, measure, in_half2,
-             class_tiebreak=True):
+             class_tiebreak=True, t=None, tele=None, tcfg=None):
     k_sched, k_arr, k_route = jax.random.split(key, 3)
 
     busy, rem, completed = _progress_service(state.busy, state.rem, speed,
                                              state.cls)
-    Q, busy, rem, cls_serv, starts, n_started = _bp_schedule(
+    if tcfg is not None:
+        # sojourn = completion slot - arrival slot of the in-service task
+        tele = tlm.record_sojourns(tele, tcfg, t, cfg.warmup, completed)
+    Q, busy, rem, cls_serv, starts, n_started, pick, start = _bp_schedule(
         k_sched, state.Q, busy, rem, state.cls, rates, cfg.service_dist,
         cfg.sigma, servable=speed > 0)
+    if tcfg is not None:
+        m = jnp.arange(cluster.M, dtype=jnp.int32)
+        tele = tlm.ring_pop(tele, tcfg, m * 3 + pick, start, m)
 
     mask, locals_, cls_arr, clipped = _arrival_batch(k_arr, cluster, scen,
                                                      lam_t, a_max,
                                                      need_cls=True)
-    Q, sel_cls = _bp_route_batch(k_route, cluster, Q, cls_arr, locals_, mask,
-                                 inv_rate_m, pod,
-                                 sequential=(cfg.route_mode == "sequential"),
-                                 class_tiebreak=class_tiebreak)
+    Q, sel, sel_cls, probe = _bp_route_batch(
+        k_route, cluster, Q, cls_arr, locals_, mask, inv_rate_m, pod,
+        sequential=(cfg.route_mode == "sequential"),
+        class_tiebreak=class_tiebreak, tcfg=tcfg)
+    if tcfg is not None:
+        tele = tlm.ring_push(tele, tcfg, sel * 3 + sel_cls, mask, t)
 
     routed = (jax.nn.one_hot(sel_cls, 3, dtype=jnp.float32)
               * mask[:, None].astype(jnp.float32)).sum(axis=0)
@@ -371,7 +413,13 @@ def _bp_step(state: BPState, sums: RawSums, key, *, cluster, rates, cfg,
                 routed=routed, busy_n=busy.sum().astype(jnp.float32),
                 routes=mask.sum().astype(jnp.float32), scheds=n_started,
                 measure=measure)
-    return BPState(Q, busy, rem, cls_serv), sums
+    if tcfg is not None:
+        tele = tlm.collect_step(
+            tele, tcfg, t=t, T=cfg.T, N=N, q_mass=Q.sum(axis=0),
+            qlen=Q.sum(axis=1), workload=_bp_workload(Q, inv_rate_m),
+            arrivals=mask.sum(), clipped=clipped,
+            completions=completed.sum(), busy_n=busy.sum(), probe=probe)
+    return BPState(Q, busy, rem, cls_serv), sums, tele
 
 
 # ---------------------------------------------------------------------------
@@ -408,7 +456,7 @@ def _grant_conflicts(tgt, prio, has, Q, key, M):
 
 
 def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
-                 pod: Optional[PodSpec], speed):
+                 pod: Optional[PodSpec], speed, tcfg=None):
     """Batched scheduling for the single-queue family (see module docstring).
 
     variant: "maxweight" (argmax of rate-weighted queue lengths — the serving
@@ -416,7 +464,12 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
     same queue — over all M or over 1+d' Pod samples) or "priority" (own >
     longest-in-rack > longest-anywhere).  speed: [M, 3] current per-class
     multipliers; a (server, queue) pair whose locality-class tier is down
-    (speed 0) is ineligible, and a fully drained server schedules nothing."""
+    (speed 0) is ineligible, and a fully drained server schedules nothing.
+
+    Also returns (rows, tgt, granted) for the telemetry sojourn rings and
+    probe = (rank_sum, regret_sum, n) probe-quality stats: for the Pod
+    variant the full [S, M] weight matrix the O(M) MaxWeight would have
+    examined is recomputed and the pod pick ranked against it."""
     M = cluster.M
     S = min(cfg.s_max, M)
     k_rows, k_cand, k_tie, k_grant, k_dur = jax.random.split(key, 5)
@@ -430,6 +483,8 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
     rows = order[:S]
     act = eligible[rows]
 
+    collect = tcfg is not None and tcfg.probes
+    probe = tlm.ZERO_PROBE
     qf = Q.astype(jnp.float32)
     if variant == "maxweight" and pod is None:
         rel = _relation_rows(cluster, rows)              # [S, M]
@@ -441,6 +496,8 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
         val = jnp.take_along_axis(w, tgt[:, None], axis=1)[:, 0]
         has = cand.any(axis=1) & act
         prio = (-val,)
+        if collect:  # full MaxWeight = the O(M) oracle itself: rank 0
+            probe = tlm.probe_stats_max(w, val, has, cand)
     elif variant == "maxweight":
         k1, k2 = jax.random.split(k_cand)
         rack = sample_rack_peer(k1, cluster, rows, pod.d_rack)     # [S, dr]
@@ -459,6 +516,12 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
         val = jnp.take_along_axis(w, c[:, None], axis=1)[:, 0]
         has = cand.any(axis=1) & act
         prio = (-val,)
+        if collect:  # rank the 1+d' pod pick against the full [S, M] oracle
+            rel_f = _relation_rows(cluster, rows)
+            sp_f = speed[rows[:, None], rel_f]
+            w_f = qf[None, :] * rates.as_array()[rel_f] * sp_f
+            elig = (Q > 0)[None, :] & (sp_f > 0)
+            probe = tlm.probe_stats_max(w_f, val, has, elig)
     elif variant == "priority":
         rel = _relation_rows(cluster, rows)              # [S, M]
         sp = speed[rows[:, None], rel]
@@ -496,20 +559,23 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
     starts = (jax.nn.one_hot(start_cls, 3, dtype=jnp.float32)
               * granted[:, None].astype(jnp.float32)).sum(axis=0)
     n_dec = has.sum().astype(jnp.float32)
-    return Q, busy, rem, cls, starts, n_dec
+    return Q, busy, rem, cls, starts, n_dec, rows, tgt, granted, probe
 
 
 def _sq_step(state: SQState, sums: RawSums, key, *, cluster, rates, cfg,
              lam_t, scen, speed, inv_rate_m, variant, pod, a_max, measure,
-             in_half2):
-    del inv_rate_m  # JSQ routing is workload-metric-free
+             in_half2, t=None, tele=None, tcfg=None):
     k_sched, k_arr, k_route = jax.random.split(key, 3)
 
     busy, rem, completed = _progress_service(state.busy, state.rem, speed,
                                              state.cls)
-    Q, busy, rem, cls_serv, starts, n_sched = _sq_schedule(
-        k_sched, cluster, state.Q, busy, rem, state.cls, rates, cfg, variant,
-        pod, speed)
+    if tcfg is not None:
+        tele = tlm.record_sojourns(tele, tcfg, t, cfg.warmup, completed)
+    Q, busy, rem, cls_serv, starts, n_sched, rows, tgt, granted, probe = \
+        _sq_schedule(k_sched, cluster, state.Q, busy, rem, state.cls, rates,
+                     cfg, variant, pod, speed, tcfg=tcfg)
+    if tcfg is not None:
+        tele = tlm.ring_pop(tele, tcfg, tgt, granted, rows)
 
     mask, locals_, _cls, clipped = _arrival_batch(k_arr, cluster, scen,
                                                   lam_t, a_max,
@@ -520,10 +586,12 @@ def _sq_step(state: SQState, sums: RawSums, key, *, cluster, rates, cfg,
             sel = route_jsq_local(kr, Qc, loc)
             return Qc.at[sel].add(valid.astype(jnp.int32)), sel
         keys = jax.random.split(k_route, a_max)
-        Q, _ = jax.lax.scan(route_one, Q, (locals_, mask, keys))
+        Q, sel = jax.lax.scan(route_one, Q, (locals_, mask, keys))
     else:
         sel = route_jsq_local(k_route, Q, locals_)
         Q = Q.at[sel].add(mask.astype(jnp.int32))
+    if tcfg is not None:
+        tele = tlm.ring_push(tele, tcfg, sel, mask, t)
 
     N = Q.sum().astype(jnp.float32) + busy.sum().astype(jnp.float32)
     sums = _acc(sums, in_half2=in_half2, N=N,
@@ -533,7 +601,22 @@ def _sq_step(state: SQState, sums: RawSums, key, *, cluster, rates, cfg,
                 busy_n=busy.sum().astype(jnp.float32),
                 routes=mask.sum().astype(jnp.float32), scheds=n_sched,
                 measure=measure)
-    return SQState(Q, busy, rem, cls_serv), sums
+    if tcfg is not None:
+        # workload proxy: queued work at the local rate (JSQ queues are
+        # local to their server); drained servers contribute 0
+        inv_l = inv_rate_m[:, LOCAL] if inv_rate_m.ndim == 2 \
+            else jnp.full((cluster.M,), inv_rate_m[LOCAL])
+        inv_l = jnp.where(jnp.isfinite(inv_l), inv_l, 0.0)
+        tele = tlm.collect_step(
+            tele, tcfg, t=t, T=cfg.T, N=N,
+            q_mass=jnp.stack([Q.sum().astype(jnp.float32),
+                              jnp.float32(0.0), jnp.float32(0.0)]),
+            qlen=Q, workload=Q.astype(jnp.float32) * inv_l,
+            arrivals=mask.sum(), clipped=clipped,
+            completions=completed.sum(), busy_n=busy.sum(), probe=probe)
+    else:
+        del inv_rate_m  # JSQ routing is workload-metric-free
+    return SQState(Q, busy, rem, cls_serv), sums, tele
 
 
 # ---------------------------------------------------------------------------
@@ -554,7 +637,8 @@ class FCFSState(NamedTuple):
 
 
 def _fcfs_step(state: FCFSState, sums: RawSums, key, *, cluster, rates, cfg,
-               lam_t, scen, speed, inv_rate_m, a_max, measure, in_half2):
+               lam_t, scen, speed, inv_rate_m, a_max, measure, in_half2,
+               t=None, tele=None, tcfg=None):
     del inv_rate_m  # FCFS is workload-metric-free
     M = cluster.M
     G = min(cfg.s_max, M)
@@ -599,7 +683,17 @@ def _fcfs_step(state: FCFSState, sums: RawSums, key, *, cluster, rates, cfg,
                 busy_n=busy.sum().astype(jnp.float32),
                 routes=jnp.float32(0.0), scheds=grant.sum().astype(jnp.float32),
                 measure=measure)
-    return FCFSState(C, busy, rem, cls), sums
+    if tcfg is not None:
+        # central queue: windows only — no per-task identity to ring-track
+        tele = tlm.collect_step(
+            tele, tcfg, t=t, T=cfg.T, N=N,
+            q_mass=jnp.stack([C.astype(jnp.float32), jnp.float32(0.0),
+                              jnp.float32(0.0)]),
+            qlen=C[None].astype(jnp.float32), workload=None,
+            arrivals=mask.sum(), clipped=clipped,
+            completions=completed.sum(), busy_n=busy.sum(),
+            probe=tlm.ZERO_PROBE)
+    return FCFSState(C, busy, rem, cls), sums, tele
 
 
 # ---------------------------------------------------------------------------
@@ -650,16 +744,30 @@ def reset_trace_count() -> None:
     _TRACE_COUNTS["_run"] = 0
 
 
+def _family(algo: str) -> str:
+    if algo in ("balanced_pandas", "balanced_pandas_pod",
+                "balanced_pandas_randomtie"):
+        return "bp"
+    if algo == "fcfs":
+        return "fcfs"
+    if algo in ("jsq_maxweight", "jsq_maxweight_pod", "jsq_priority"):
+        return "sq"
+    raise ValueError(f"unknown algorithm {algo!r}")
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("algo", "cluster", "rates", "cfg", "pod", "a_max"))
+    static_argnames=("algo", "cluster", "rates", "cfg", "pod", "a_max",
+                     "tcfg"))
 def _run(key, lam, scen: ScenarioData, *, algo: str, cluster: Cluster,
-         rates: Rates, cfg: SimConfig, pod: Optional[PodSpec], a_max: int):
+         rates: Rates, cfg: SimConfig, pod: Optional[PodSpec], a_max: int,
+         tcfg=None):
     _TRACE_COUNTS["_run"] += 1        # executes only on a jit cache miss
     half2_from = cfg.warmup + (cfg.T - cfg.warmup) // 2
+    family = _family(algo)
 
     def step(carry, t):
-        state, sums = carry
+        state, sums, tele = carry
         k = jax.random.fold_in(key, t)
         measure = t >= cfg.warmup
         in_half2 = t >= half2_from
@@ -667,32 +775,34 @@ def _run(key, lam, scen: ScenarioData, *, algo: str, cluster: Cluster,
         kw = dict(cluster=cluster, rates=rates, cfg=cfg,
                   lam_t=lam * scen.lam_shape[t], scen=scen, speed=speed,
                   inv_rate_m=inv_rate_matrix(rates, speed),
-                  a_max=a_max, measure=measure, in_half2=in_half2)
-        if algo in ("balanced_pandas", "balanced_pandas_pod",
-                    "balanced_pandas_randomtie"):
-            state, sums = _bp_step(
+                  a_max=a_max, measure=measure, in_half2=in_half2,
+                  t=t, tele=tele, tcfg=tcfg)
+        if family == "bp":
+            state, sums, tele = _bp_step(
                 state, sums, k, pod=pod,
                 class_tiebreak=(algo != "balanced_pandas_randomtie"), **kw)
-        elif algo in ("jsq_maxweight", "jsq_maxweight_pod", "jsq_priority"):
+        elif family == "sq":
             variant = "priority" if algo == "jsq_priority" else "maxweight"
-            state, sums = _sq_step(state, sums, k, variant=variant, pod=pod, **kw)
-        elif algo == "fcfs":
-            state, sums = _fcfs_step(state, sums, k, **kw)
+            state, sums, tele = _sq_step(state, sums, k, variant=variant,
+                                         pod=pod, **kw)
+        elif family == "fcfs":
+            state, sums, tele = _fcfs_step(state, sums, k, **kw)
         else:
             raise ValueError(f"unknown algorithm {algo!r}")
-        return (state, sums), None
+        return (state, sums, tele), None
 
-    if algo in ("balanced_pandas", "balanced_pandas_pod",
-                "balanced_pandas_randomtie"):
+    if family == "bp":
         state0 = BPState.zero(cluster.M)
-    elif algo == "fcfs":
+    elif family == "fcfs":
         state0 = FCFSState.zero(cluster.M)
     else:
         state0 = SQState.zero(cluster.M)
+    tele0 = (tlm.zero_telemetry(tcfg, cluster.M, family)
+             if tcfg is not None else None)
 
-    (state, sums), _ = jax.lax.scan(step, (state0, RawSums.zero()),
-                                    jnp.arange(cfg.T))
-    return sums
+    (state, sums, tele), _ = jax.lax.scan(
+        step, (state0, RawSums.zero(), tele0), jnp.arange(cfg.T))
+    return sums, tele
 
 
 def simulate(algo: str, cluster: Cluster, rates: Rates, load: float,
@@ -715,9 +825,33 @@ def simulate(algo: str, cluster: Cluster, rates: Rates, load: float,
     pod = _pod_for(algo, pod)
     if a_max is None:
         a_max = cfg.resolve_a_max(lam * float(jnp.max(scen.lam_shape)))
-    sums = _run(key, jnp.float32(lam), scen, algo=algo, cluster=cluster,
-                rates=rates, cfg=cfg, pod=pod, a_max=a_max)
+    sums, _ = _run(key, jnp.float32(lam), scen, algo=algo, cluster=cluster,
+                   rates=rates, cfg=cfg, pod=pod, a_max=a_max)
     return summarize(sums, algo, cluster, rates, pod)
+
+
+def simulate_with_telemetry(
+        algo: str, cluster: Cluster, rates: Rates, load: float,
+        key: jax.Array, cfg: SimConfig = SimConfig(),
+        pod: Optional[PodSpec] = None, scenario=None, pad=None,
+        a_max: Optional[int] = None,
+        telemetry: tlm.TelemetryConfig = tlm.TelemetryConfig()):
+    """``simulate`` + in-jit collectors; returns (SimResult, Telemetry).
+
+    The SimResult is bit-identical to ``simulate``'s (collectors never
+    consume PRNG keys — tests/test_telemetry.py enforces it).  Host-side
+    consumers live in repro.telemetry.export (JSONL events, windowed
+    drift, sojourn percentiles, probe summaries)."""
+    scen, lam_cap = realize(get_scenario(scenario), cluster, rates, cfg.T,
+                            pad=pad)
+    lam = float(load) * lam_cap
+    pod = _pod_for(algo, pod)
+    if a_max is None:
+        a_max = cfg.resolve_a_max(lam * float(jnp.max(scen.lam_shape)))
+    sums, tele = _run(key, jnp.float32(lam), scen, algo=algo,
+                      cluster=cluster, rates=rates, cfg=cfg, pod=pod,
+                      a_max=a_max, tcfg=telemetry)
+    return summarize(sums, algo, cluster, rates, pod), tele
 
 
 def simulate_grid(algo: str, cluster: Cluster, rates: Rates, loads,
@@ -739,11 +873,40 @@ def simulate_grid(algo: str, cluster: Cluster, rates: Rates, loads,
     keys = jax.random.split(jax.random.PRNGKey(seed0), n_seeds)
 
     def one(key, l):
-        return _run(key, l, scen, algo=algo, cluster=cluster, rates=rates,
-                    cfg=cfg, pod=pod, a_max=a_max)
+        sums, _ = _run(key, l, scen, algo=algo, cluster=cluster, rates=rates,
+                       cfg=cfg, pod=pod, a_max=a_max)
+        return sums
 
     sums = jax.vmap(lambda k: jax.vmap(lambda l: one(k, l))(lam))(keys)
     return summarize(sums, algo, cluster, rates, pod)
+
+
+def simulate_grid_with_telemetry(
+        algo: str, cluster: Cluster, rates: Rates, loads, n_seeds: int,
+        cfg: SimConfig = SimConfig(), pod: Optional[PodSpec] = None,
+        seed0: int = 0, scenario=None, pad=None,
+        a_max: Optional[int] = None,
+        telemetry: tlm.TelemetryConfig = tlm.TelemetryConfig()):
+    """``simulate_grid`` + collectors; returns (SimResult, Telemetry) with
+    leading dims [n_seeds, n_loads] on every leaf.  Aggregate over the
+    batch axes with ``repro.telemetry.export.aggregate`` (sums add, maxima
+    max), or index a single (seed, load) cell for per-run windows."""
+    import numpy as _np
+    scen, lam_cap = realize(get_scenario(scenario), cluster, rates, cfg.T,
+                            pad=pad)
+    lam = jnp.array([l * lam_cap for l in loads], jnp.float32)
+    pod = _pod_for(algo, pod)
+    if a_max is None:
+        a_max = cfg.resolve_a_max(float(_np.max(_np.asarray(lam)))
+                                  * float(jnp.max(scen.lam_shape)))
+    keys = jax.random.split(jax.random.PRNGKey(seed0), n_seeds)
+
+    def one(key, l):
+        return _run(key, l, scen, algo=algo, cluster=cluster, rates=rates,
+                    cfg=cfg, pod=pod, a_max=a_max, tcfg=telemetry)
+
+    sums, tele = jax.vmap(lambda k: jax.vmap(lambda l: one(k, l))(lam))(keys)
+    return summarize(sums, algo, cluster, rates, pod), tele
 
 
 def summarize(s: RawSums, algo: str, cluster: Cluster, rates: Rates,

@@ -11,7 +11,11 @@ The engine is deliberately two-layer:
     alpha/beta/gamma service rates of repro.sched.locality.
 
 Metrics: per-request completion time (arrival -> last token), locality mix,
-router probes per decision (the paper's O(M) vs O(1) complexity axis).
+router probes per decision (the paper's O(M) vs O(1) complexity axis),
+per-tick queue-depth / batch-size traces, and latency p50/p95 read from
+the shared log-spaced histogram convention (repro.telemetry.hist) — the
+same bins the simulator's in-jit collectors use, so serving and simulation
+latency distributions are directly comparable.
 """
 from __future__ import annotations
 
@@ -26,6 +30,7 @@ import numpy as np
 from ..models import decode_step, init_cache, logits_fn
 from ..sched.locality import FleetTopology
 from ..sched.router import PodRouter
+from ..telemetry.hist import np_hist, percentiles
 
 
 @dataclasses.dataclass
@@ -47,6 +52,12 @@ class EngineStats:
     completions: list
     locality: np.ndarray
     probes_per_decision: float
+    # observability (PR 6): per-tick traces + histogram-derived latency
+    queue_depth_trace: Optional[np.ndarray] = None   # [ticks] waiting reqs
+    batch_size_trace: Optional[np.ndarray] = None    # [ticks] active reqs
+    latency_hist: Optional[np.ndarray] = None        # telemetry.hist bins
+    latency_p50: float = float("nan")
+    latency_p95: float = float("nan")
 
 
 class ServeEngine:
@@ -68,6 +79,8 @@ class ServeEngine:
             r: [] for r in range(fleet.n_replicas)}
         self.tick = 0
         self.done: list[Request] = []
+        self._queue_depth_trace: list[int] = []
+        self._batch_size_trace: list[int] = []
         self._decode = jax.jit(functools.partial(self._decode_impl, cfg=cfg))
         self.rng = np.random.default_rng(seed)
 
@@ -97,6 +110,10 @@ class ServeEngine:
         every active request on every replica (one real batched decode per
         replica), retire finished requests."""
         self.tick += 1
+        self._queue_depth_trace.append(
+            sum(len(q) for q in self.waiting.values()))
+        self._batch_size_trace.append(
+            sum(len(b) for b in self.active.values()))
         for rep in range(self.fleet.n_replicas):
             admit = [r for r in self.waiting[rep]
                      if r.start_tick <= self.tick
@@ -159,5 +176,13 @@ class ServeEngine:
         loc = np.bincount([r.cls for r in self.done], minlength=3)
         probes = (self.router.stats.probes
                   / max(self.router.stats.decisions, 1))
-        return EngineStats(completions=comp, locality=loc / max(len(self.done), 1),
-                           probes_per_decision=probes)
+        hist = np_hist(comp) if comp else None
+        p50 = p95 = float("nan")
+        if hist is not None:
+            p50, p95 = percentiles(hist, (50, 95))
+        return EngineStats(
+            completions=comp, locality=loc / max(len(self.done), 1),
+            probes_per_decision=probes,
+            queue_depth_trace=np.asarray(self._queue_depth_trace, np.int64),
+            batch_size_trace=np.asarray(self._batch_size_trace, np.int64),
+            latency_hist=hist, latency_p50=p50, latency_p95=p95)

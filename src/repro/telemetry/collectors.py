@@ -1,0 +1,286 @@
+"""In-jit telemetry collectors: pytree state updated inside the slot scan.
+
+Everything here obeys two hard contracts (tests/test_telemetry.py):
+
+  1. **No dynamics perturbation.**  Collectors never consume PRNG keys and
+     never feed back into routing/scheduling — a simulation with telemetry
+     enabled is bit-identical (same RawSums) to one without.
+  2. **No recompiles.**  All collector state has static shapes derived from
+     ``TelemetryConfig`` (a hashable static jit argument) and the cluster
+     size, so a whole scenario sweep with one config shares one compiled
+     signature, exactly like the telemetry-off sweep.
+
+State layout (the ``Telemetry`` pytree):
+
+  win        [W, n sum channels]  per-window accumulators (WINDOW_SUMS
+             names the channels; slot values are scatter-added into window
+             w = t // window_len, window_len = ceil(T / W))
+  win_max    [W, n max channels]  per-window running maxima (WINDOW_MAXES)
+  qlen_hist  [W, B]  per-window histogram of per-server queue lengths
+  work_hist  [W, B]  per-window histogram of per-server workloads
+             (B log-spaced bins — see hist.py for the shared convention)
+  sojourn_hist [B]   per-task sojourn (arrival -> service completion)
+             histogram, post-warmup tasks only — the distributional delay
+             estimate validated against refsim's exact per-task sojourns
+  sojourn_dropped    f32 count of tasks whose arrival slot could not be
+             recorded (per-queue FIFO ring overflow; 0 at calibration
+             loads — nonzero values mean percentile estimates are biased
+             and are surfaced in the export manifest)
+  ring/head/tail/cur_arr   the FIFO arrival-slot rings behind the sojourn
+             histogram (BP: one ring per (server, class) sub-queue; SQ:
+             one per server; FCFS: disabled).  ``cur_arr[m]`` is the
+             arrival slot of server m's in-service task (-1 = unknown).
+
+Probe-quality channels (Pod policies): per pod decision, the *rank* of the
+chosen server's score among all M candidates the O(M) policy would have
+examined (0 = the pod probe found the global optimum) and the *regret*
+(chosen score minus the global optimum — the workload the decision left on
+the table).  This is the direct observable behind the paper's d-sensitivity
+claim: BP-Pod's regret stays flat as d shrinks, JSQ-MW-Pod's does not.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from .hist import BINS_PER_OCTAVE, N_BINS, bin_index
+
+# ---------------------------------------------------------------------------
+# Static config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Static collector parameters (hashable: safe as a jit static arg).
+
+    A sweep that shares one TelemetryConfig shares one compiled signature.
+    """
+
+    n_windows: int = 64          # W: windowed-time-series resolution
+    n_bins: int = N_BINS         # B: histogram bins (hist.py convention)
+    bins_per_octave: int = BINS_PER_OCTAVE
+    sojourns: bool = True        # per-task sojourn histogram (BP/SQ)
+    probes: bool = True          # pod probe rank/regret channels
+    ring_cap: int = 128          # FIFO arrival-slot records per queue
+
+    def window_len(self, T: int) -> int:
+        return max(1, -(-T // self.n_windows))
+
+
+# Per-window SUM channels (accumulated with scatter-add; a slot's values
+# land in window t // window_len).  "slots" counts slots so means are
+# sums / slots at export time.
+WINDOW_SUMS = (
+    "slots", "sum_N", "q_local", "q_rack", "q_remote", "completions",
+    "busy", "arrivals", "clipped", "w_mean", "w_max",
+    "probe_rank", "probe_regret", "probe_decisions",
+)
+# Per-window MAX channels (accumulated with scatter-max).
+WINDOW_MAXES = ("max_N", "max_w")
+
+_S = {n: i for i, n in enumerate(WINDOW_SUMS)}
+_X = {n: i for i, n in enumerate(WINDOW_MAXES)}
+
+
+class Telemetry(NamedTuple):
+    """Collector state carried through the slot scan (see module doc)."""
+
+    win: jnp.ndarray
+    win_max: jnp.ndarray
+    qlen_hist: jnp.ndarray
+    work_hist: jnp.ndarray
+    sojourn_hist: jnp.ndarray
+    sojourn_dropped: jnp.ndarray
+    ring: Optional[jnp.ndarray] = None      # [NQ + 1, cap] int32 (dummy row)
+    head: Optional[jnp.ndarray] = None      # [NQ + 1] int32
+    tail: Optional[jnp.ndarray] = None      # [NQ + 1] int32
+    cur_arr: Optional[jnp.ndarray] = None   # [M] int32, -1 = unknown
+
+
+def zero_telemetry(tcfg: TelemetryConfig, M: int, family: str) -> Telemetry:
+    """Fresh collector state for one run.
+
+    family: "bp" (per-(server, class) sub-queues), "sq" (one queue per
+    server) or "fcfs" (central queue — sojourn rings disabled: the grabbed
+    task's identity is sampled at dequeue, so no per-task arrival slot
+    exists to record).
+    """
+    W, B = tcfg.n_windows, tcfg.n_bins
+    z32 = jnp.zeros
+    ring = head = tail = cur_arr = None
+    if tcfg.sojourns and family in ("bp", "sq"):
+        nq = 3 * M if family == "bp" else M
+        ring = jnp.full((nq + 1, tcfg.ring_cap), -1, jnp.int32)
+        head = z32(nq + 1, jnp.int32)
+        tail = z32(nq + 1, jnp.int32)
+        cur_arr = jnp.full((M,), -1, jnp.int32)
+    return Telemetry(
+        win=z32((W, len(WINDOW_SUMS)), jnp.float32),
+        win_max=z32((W, len(WINDOW_MAXES)), jnp.float32),
+        qlen_hist=z32((W, B), jnp.float32),
+        work_hist=z32((W, B), jnp.float32),
+        sojourn_hist=z32(B, jnp.float32),
+        sojourn_dropped=jnp.float32(0.0),
+        ring=ring, head=head, tail=tail, cur_arr=cur_arr,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Windowed time series + per-window distributions
+# ---------------------------------------------------------------------------
+
+
+def collect_step(tele: Telemetry, tcfg: TelemetryConfig, *, t, T: int,
+                 N, q_mass, qlen, workload, arrivals, clipped, completions,
+                 busy_n, probe) -> Telemetry:
+    """Fold one slot's observables into the windowed collectors.
+
+    t: traced slot index; q_mass: [3] queue mass by locality class;
+    qlen: [M] (or [1] for FCFS) per-server queue lengths; workload: [M]
+    per-server BP workload or None (families without a workload metric);
+    probe: (rank_sum, regret_sum, n_decisions) floats.
+    """
+    w = jnp.minimum(t // tcfg.window_len(T), tcfg.n_windows - 1)
+    rank_s, regret_s, probe_n = probe
+    f = jnp.float32
+    if workload is None:
+        w_mean = w_max = f(0.0)
+    else:
+        finite = jnp.where(jnp.isfinite(workload), workload, 0.0)
+        w_mean = finite.mean()
+        w_max = finite.max()
+    q_mass = jnp.asarray(q_mass, jnp.float32)
+    row = jnp.stack([
+        f(1.0), f(N), q_mass[0], q_mass[1], q_mass[2], f(completions),
+        f(busy_n), f(arrivals), f(clipped), w_mean, w_max,
+        f(rank_s), f(regret_s), f(probe_n)])
+    win = tele.win.at[w].add(row)
+    win_max = tele.win_max.at[w].max(jnp.stack([f(N), w_max]))
+    qbins = bin_index(qlen, tcfg.n_bins, tcfg.bins_per_octave)
+    qlen_hist = tele.qlen_hist.at[w, qbins].add(1.0)
+    work_hist = tele.work_hist
+    if workload is not None:
+        wbins = bin_index(jnp.where(jnp.isfinite(workload), workload, 0.0),
+                          tcfg.n_bins, tcfg.bins_per_octave)
+        work_hist = work_hist.at[w, wbins].add(1.0)
+    return tele._replace(win=win, win_max=win_max, qlen_hist=qlen_hist,
+                         work_hist=work_hist)
+
+
+# ---------------------------------------------------------------------------
+# Sojourn rings: per-queue FIFOs of arrival slots, mirrored on the queue
+# counts the simulator already keeps.  Pushes happen at routing, pops at
+# service start, the histogram record at completion — exactly refsim's
+# per-task bookkeeping, in static shapes.
+# ---------------------------------------------------------------------------
+
+
+def ring_push(tele: Telemetry, tcfg: TelemetryConfig, qid: jnp.ndarray,
+              mask: jnp.ndarray, t) -> Telemetry:
+    """Append arrival slot ``t`` to the FIFO of queue ``qid[a]`` for every
+    valid arrival of a slot's batch.  Same-queue arrivals within the batch
+    are ranked by batch position (O(A^2) one-hot comparison — A = a_max is
+    small) so each lands in its own ring slot.  A queue whose ring is full
+    drops the record (counted; the queue itself is NOT affected)."""
+    if tele.ring is None:
+        return tele
+    cap = tcfg.ring_cap
+    nq = tele.ring.shape[0] - 1
+    A = qid.shape[0]
+    i = jnp.arange(A)
+    same_before = ((qid[None, :] == qid[:, None]) & mask[None, :]
+                   & (i[None, :] < i[:, None]))
+    rank = same_before.sum(axis=1)
+    nrec = tele.tail[qid] - tele.head[qid]
+    ok = mask & (nrec + rank < cap)
+    qd = jnp.where(ok, qid, nq)                      # dummy row absorbs
+    pos = jnp.where(ok, (tele.tail[qid] + rank) % cap, 0)
+    ring = tele.ring.at[qd, pos].set(jnp.int32(t))
+    tail = tele.tail.at[qd].add(1)
+    tail = tail.at[nq].set(0)                        # keep dummy row inert
+    dropped = tele.sojourn_dropped + (mask & ~ok).sum().astype(jnp.float32)
+    return tele._replace(ring=ring, tail=tail, sojourn_dropped=dropped)
+
+
+def ring_pop(tele: Telemetry, tcfg: TelemetryConfig, qid: jnp.ndarray,
+             do_pop: jnp.ndarray, server: jnp.ndarray) -> Telemetry:
+    """Pop the head arrival slot of queue ``qid[s]`` for every granted
+    service start and stamp it into ``cur_arr[server[s]]``.  Multiple
+    claimants on one queue (SQ steal conflicts) are ranked by claimant
+    position.  A queue with no records (post-overflow) yields -1 — that
+    task's sojourn is skipped, never misattributed as 0."""
+    if tele.ring is None:
+        return tele
+    cap = tcfg.ring_cap
+    nq = tele.ring.shape[0] - 1
+    P = qid.shape[0]
+    i = jnp.arange(P)
+    same_before = ((qid[None, :] == qid[:, None]) & do_pop[None, :]
+                   & (i[None, :] < i[:, None]))
+    rank = same_before.sum(axis=1)
+    nrec = tele.tail[qid] - tele.head[qid]
+    ok = do_pop & (rank < nrec)
+    arr = tele.ring[qid, (tele.head[qid] + rank) % cap]
+    arr = jnp.where(ok, arr, -1)
+    qd = jnp.where(ok, qid, nq)
+    head = tele.head.at[qd].add(1)
+    head = head.at[nq].set(0)
+    cur_arr = tele.cur_arr.at[server].set(
+        jnp.where(do_pop, arr, tele.cur_arr[server]))
+    return tele._replace(head=head, cur_arr=cur_arr)
+
+
+def record_sojourns(tele: Telemetry, tcfg: TelemetryConfig, t, warmup: int,
+                    completed: jnp.ndarray) -> Telemetry:
+    """At completion, sojourn = t - arrival slot of the in-service task.
+    Recorded only when the task arrived after warmup (refsim's measurement
+    condition: ``t >= warmup and started_at[m] >= warmup``)."""
+    if tele.cur_arr is None:
+        return tele
+    s = jnp.int32(t) - tele.cur_arr
+    valid = completed & (tele.cur_arr >= warmup)
+    b = bin_index(s, tcfg.n_bins, tcfg.bins_per_octave)
+    hist = tele.sojourn_hist.at[b].add(valid.astype(jnp.float32))
+    return tele._replace(sojourn_hist=hist)
+
+
+# ---------------------------------------------------------------------------
+# Probe quality (rank / regret of pod decisions vs the O(M) optimum)
+# ---------------------------------------------------------------------------
+
+
+def probe_stats_min(full_scores: jnp.ndarray, chosen: jnp.ndarray,
+                    valid: jnp.ndarray):
+    """(rank_sum, regret_sum, n) for arg-MIN decisions.
+
+    full_scores: [..., M] scores of every server the O(M) policy would
+    examine (+inf = ineligible); chosen: [...] the pod decision's own
+    score; valid: [...] decision mask.  rank = count of strictly better
+    servers (0 = pod found a global optimum); regret = chosen - min.
+    """
+    best = jnp.min(full_scores, axis=-1)
+    rank = (full_scores < chosen[..., None]).sum(axis=-1)
+    regret = chosen - best
+    regret = jnp.where(jnp.isfinite(regret), regret, 0.0)
+    v = valid.astype(jnp.float32)
+    return ((rank * v).sum(), (jnp.maximum(regret, 0.0) * v).sum(), v.sum())
+
+
+def probe_stats_max(full_scores: jnp.ndarray, chosen: jnp.ndarray,
+                    valid: jnp.ndarray, eligible: jnp.ndarray):
+    """(rank_sum, regret_sum, n) for arg-MAX decisions (JSQ-MaxWeight
+    scheduling).  eligible masks the (server, queue) pairs the O(M) policy
+    may pick; regret = max - chosen."""
+    masked = jnp.where(eligible, full_scores, -jnp.inf)
+    best = jnp.max(masked, axis=-1)
+    rank = (eligible & (full_scores > chosen[..., None])).sum(axis=-1)
+    regret = best - chosen
+    regret = jnp.where(jnp.isfinite(regret), regret, 0.0)
+    v = valid.astype(jnp.float32)
+    return ((rank * v).sum(), (jnp.maximum(regret, 0.0) * v).sum(), v.sum())
+
+
+ZERO_PROBE = (jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))

@@ -1,0 +1,252 @@
+"""Host-side telemetry sinks: collected pytrees -> JSONL events + manifest.
+
+JSONL event stream (one JSON object per line), schema version 1:
+
+  {"event": "run", "schema": 1, ...}        run manifest: scenario, algo,
+      d, load, seeds, T, warmup, window_len, n_windows, wall_s,
+      trace_count, plus anything the caller adds.  Always first.
+  {"event": "window", "w": int, "t0": int, "t1": int, "slots": float,
+      "mean_N": float, "max_N": float, "throughput": float,
+      "utilization": float, "arrivals": float, "clip_fraction": float,
+      "q_local"/"q_rack"/"q_remote": float, "w_mean": float,
+      "w_max": float, "probe_rank": float|null, "probe_regret": float|null,
+      "probe_decisions": float}             one per telemetry window.
+  {"event": "histogram", "name": "sojourn"|"queue_len"|"workload",
+      "window": int|null, "bins_per_octave": int, "counts": [...]}
+      per-window for queue_len/workload (and an aggregate with
+      window=null), whole-run for sojourn.
+  {"event": "percentiles", "name": "sojourn", "p50": float, "p95": float,
+      "p99": float, "n": float, "dropped": float}
+
+``validate_events`` checks this shape (the CI smoke leg runs it over the
+benchmark's --metrics-out output via scripts/validate_telemetry.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+from .collectors import WINDOW_MAXES, WINDOW_SUMS, Telemetry, TelemetryConfig
+from .hist import percentiles
+
+SCHEMA_VERSION = 1
+
+_S = {n: i for i, n in enumerate(WINDOW_SUMS)}
+_X = {n: i for i, n in enumerate(WINDOW_MAXES)}
+
+
+def aggregate(tele: Telemetry) -> Telemetry:
+    """Reduce vmapped (``simulate_grid``) telemetry over its leading batch
+    axes: counts/sums add, maxima max, rings are dropped (per-run state)."""
+    win = np.asarray(tele.win, np.float64)
+    extra = win.ndim - 2
+    if extra == 0:
+        return tele._replace(ring=None, head=None, tail=None, cur_arr=None)
+    ax = tuple(range(extra))
+    return Telemetry(
+        win=win.sum(axis=ax),
+        win_max=np.asarray(tele.win_max, np.float64).max(axis=ax),
+        qlen_hist=np.asarray(tele.qlen_hist, np.float64).sum(axis=ax),
+        work_hist=np.asarray(tele.work_hist, np.float64).sum(axis=ax),
+        sojourn_hist=np.asarray(tele.sojourn_hist, np.float64).sum(axis=ax),
+        sojourn_dropped=np.asarray(tele.sojourn_dropped,
+                                   np.float64).sum(),
+    )
+
+
+def window_records(tele: Telemetry, tcfg: TelemetryConfig, T: int) -> list:
+    """Derived per-window rows (means from sums; empty windows skipped)."""
+    tele = aggregate(tele)
+    win = np.asarray(tele.win, np.float64)
+    wmax = np.asarray(tele.win_max, np.float64)
+    wl = tcfg.window_len(T)
+    rows = []
+    for w in range(win.shape[0]):
+        slots = win[w, _S["slots"]]
+        if slots <= 0:
+            continue
+        s = lambda n: float(win[w, _S[n]])  # noqa: E731
+        arr = s("arrivals")
+        probe_n = s("probe_decisions")
+        rows.append({
+            "event": "window", "w": w, "t0": w * wl,
+            "t1": min((w + 1) * wl, T), "slots": slots,
+            "mean_N": s("sum_N") / slots,
+            "max_N": float(wmax[w, _X["max_N"]]),
+            "throughput": s("completions") / slots,
+            "utilization": s("busy") / slots,   # busy-server slots per slot
+            "arrivals": arr / slots,
+            "clip_fraction": s("clipped") / max(arr + s("clipped"), 1.0),
+            "q_local": s("q_local") / slots,
+            "q_rack": s("q_rack") / slots,
+            "q_remote": s("q_remote") / slots,
+            "w_mean": s("w_mean") / slots,
+            "w_max": s("w_max") / slots,
+            "probe_rank": s("probe_rank") / probe_n if probe_n else None,
+            "probe_regret": s("probe_regret") / probe_n if probe_n else None,
+            "probe_decisions": probe_n,
+        })
+    return rows
+
+
+def probe_summary(tele: Telemetry) -> dict:
+    """Run-level mean probe rank / regret over all pod decisions."""
+    win = np.asarray(aggregate(tele).win, np.float64).sum(axis=0)
+    n = win[_S["probe_decisions"]]
+    return {
+        "decisions": float(n),
+        "mean_rank": float(win[_S["probe_rank"]] / n) if n else None,
+        "mean_regret": float(win[_S["probe_regret"]] / n) if n else None,
+    }
+
+
+def sojourn_percentiles(tele: Telemetry, tcfg: TelemetryConfig,
+                        ps=(50, 95, 99)) -> dict:
+    tele = aggregate(tele)
+    hist = np.asarray(tele.sojourn_hist, np.float64)
+    vals = percentiles(hist, ps, tcfg.bins_per_octave)
+    out = {f"p{p}": v for p, v in zip(ps, vals)}
+    out["n"] = float(hist.sum())
+    out["dropped"] = float(np.asarray(tele.sojourn_dropped))
+    return out
+
+
+def windowed_drift(tele: Telemetry, tcfg: TelemetryConfig, T: int,
+                   warmup: int) -> float:
+    """Drift from the telemetry ring: mean N over the last quarter of
+    post-warmup windows divided by the first quarter.  ~1 means the chain
+    mixed; >> 1 means still growing (slow mixing or supercritical) — the
+    windowed upgrade of SimResult.drift's single half2/half1 ratio, and
+    the signal ROADMAP's auto-extend warmup will consume."""
+    tele = aggregate(tele)
+    win = np.asarray(tele.win, np.float64)
+    wl = tcfg.window_len(T)
+    w0 = -(-warmup // wl)                        # first fully-measured window
+    slots = win[w0:, _S["slots"]]
+    meas = np.where(slots > 0)[0]
+    if len(meas) < 2:
+        return float("nan")
+    mean_N = win[w0:, _S["sum_N"]][meas] / slots[meas]
+    k = max(1, len(meas) // 4)
+    head, tail = mean_N[:k].mean(), mean_N[-k:].mean()
+    return float(tail / max(head, 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# JSONL events
+# ---------------------------------------------------------------------------
+
+
+def run_manifest(**fields) -> dict:
+    """The run-manifest event; callers pass scenario/algo/d/load/seeds/
+    T/warmup/wall_s/trace_count and any extra context."""
+    return {"event": "run", "schema": SCHEMA_VERSION, **fields}
+
+
+def to_events(tele: Telemetry, tcfg: TelemetryConfig, T: int, warmup: int,
+              manifest: Optional[dict] = None,
+              per_window_hists: bool = False) -> list:
+    """Flatten one run's collected telemetry into the JSONL event list."""
+    tele = aggregate(tele)
+    events = []
+    if manifest is not None:
+        m = dict(manifest)
+        m.setdefault("event", "run")
+        m.setdefault("schema", SCHEMA_VERSION)
+        m["n_windows"] = tcfg.n_windows
+        m["window_len"] = tcfg.window_len(T)
+        m["drift_windowed"] = windowed_drift(tele, tcfg, T, warmup)
+        events.append(m)
+    events.extend(window_records(tele, tcfg, T))
+    bpo = tcfg.bins_per_octave
+    for name, h in (("queue_len", tele.qlen_hist),
+                    ("workload", tele.work_hist)):
+        h = np.asarray(h, np.float64)
+        events.append({"event": "histogram", "name": name, "window": None,
+                       "bins_per_octave": bpo,
+                       "counts": h.sum(axis=0).tolist()})
+        if per_window_hists:
+            for w in range(h.shape[0]):
+                if h[w].sum() > 0:
+                    events.append({"event": "histogram", "name": name,
+                                   "window": w, "bins_per_octave": bpo,
+                                   "counts": h[w].tolist()})
+    events.append({"event": "histogram", "name": "sojourn", "window": None,
+                   "bins_per_octave": bpo,
+                   "counts": np.asarray(tele.sojourn_hist,
+                                        np.float64).tolist()})
+    events.append({"event": "percentiles", "name": "sojourn",
+                   **sojourn_percentiles(tele, tcfg)})
+    return events
+
+
+def write_jsonl(path: str, events: list, append: bool = True) -> None:
+    parent = os.path.dirname(os.path.abspath(path))
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "a" if append else "w") as f:
+        for e in events:
+            f.write(json.dumps(e) + "\n")
+
+
+def read_jsonl(path: str) -> list:
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+_REQUIRED = {
+    "run": ("schema",),
+    "window": ("w", "t0", "t1", "slots", "mean_N", "max_N", "throughput",
+               "utilization", "arrivals", "clip_fraction"),
+    "histogram": ("name", "window", "bins_per_octave", "counts"),
+    "percentiles": ("name", "n"),
+}
+
+
+def validate_events(events: list) -> list:
+    """Schema check; returns a list of error strings (empty == valid)."""
+    errors = []
+    if not events:
+        return ["empty event stream"]
+    if events[0].get("event") != "run":
+        errors.append("first event must be the run manifest")
+    for i, e in enumerate(events):
+        kind = e.get("event")
+        if kind not in _REQUIRED:
+            errors.append(f"line {i + 1}: unknown event {kind!r}")
+            continue
+        missing = [k for k in _REQUIRED[kind] if k not in e]
+        if missing:
+            errors.append(f"line {i + 1} ({kind}): missing {missing}")
+        if kind == "run" and e.get("schema") != SCHEMA_VERSION:
+            errors.append(f"line {i + 1}: schema {e.get('schema')} != "
+                          f"{SCHEMA_VERSION}")
+        if kind == "histogram" and not isinstance(e.get("counts"), list):
+            errors.append(f"line {i + 1}: histogram counts must be a list")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# Clip-fraction surfacing (satellite): silent arrival clipping biases
+# results invisibly — callers of simulate_grid print this loudly.
+# ---------------------------------------------------------------------------
+
+
+def format_clip_warning(cells: list) -> Optional[str]:
+    """cells: [(label, clip_fraction), ...]; returns a loud multi-line
+    warning for the clipped ones, or None when nothing clipped."""
+    hot = [(lbl, f) for lbl, f in cells if f > 0]
+    if not hot:
+        return None
+    lines = ["!" * 72,
+             "! WARNING: arrival clipping detected — Poisson draws above "
+             "a_max were",
+             "! truncated; measured loads are BIASED LOW in these cells "
+             "(raise a_max):"]
+    for lbl, f in sorted(hot, key=lambda x: -x[1]):
+        lines.append(f"!   {lbl}: clip_fraction = {f:.3e}")
+    lines.append("!" * 72)
+    return "\n".join(lines)

@@ -1,0 +1,279 @@
+"""Telemetry subsystem tests (PR 6): the two hard contracts — zero
+dynamics perturbation, zero extra compiles — plus accuracy of the
+histogram percentiles against refsim's exact per-task sojourns, window
+accounting against the RawSums accumulators, probe-quality semantics, and
+the JSONL export schema."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    PodSpec,
+    Rates,
+    SimConfig,
+    reset_trace_count,
+    simulate,
+    simulate_grid_with_telemetry,
+    simulate_with_telemetry,
+    trace_count,
+)
+from repro.core.refsim import simulate_bp_ref
+from repro.telemetry import (
+    TelemetryConfig,
+    aggregate,
+    format_clip_warning,
+    np_hist,
+    percentiles,
+    probe_summary,
+    read_jsonl,
+    run_manifest,
+    sojourn_percentiles,
+    to_events,
+    validate_events,
+    window_records,
+    windowed_drift,
+    write_jsonl,
+)
+
+CLUSTER = Cluster(M=40, K=4)
+RATES = Rates(0.05, 0.025, 0.01)
+TCFG = TelemetryConfig()
+
+
+def _res_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, b))
+
+
+# ---------------------------------------------------------------------------
+# Contract 1: collectors never perturb the dynamics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["balanced_pandas", "balanced_pandas_pod",
+                                  "jsq_maxweight", "jsq_maxweight_pod",
+                                  "jsq_priority", "fcfs"])
+def test_telemetry_on_is_bit_identical(algo):
+    cfg = SimConfig(T=1_500, warmup=400)
+    key = jax.random.PRNGKey(11)
+    r0 = simulate(algo, CLUSTER, RATES, 0.6, key, cfg)
+    r1, tele = simulate_with_telemetry(algo, CLUSTER, RATES, 0.6, key, cfg,
+                                       telemetry=TCFG)
+    assert _res_equal(r0, r1), algo
+    assert float(np.asarray(tele.win)[:, 0].sum()) == cfg.T  # every slot seen
+
+
+def test_telemetry_bit_identical_batched_mode():
+    cfg = SimConfig(T=1_200, warmup=300, route_mode="batched")
+    key = jax.random.PRNGKey(5)
+    for algo in ("balanced_pandas", "balanced_pandas_pod"):
+        r0 = simulate(algo, CLUSTER, RATES, 0.6, key, cfg)
+        r1, _ = simulate_with_telemetry(algo, CLUSTER, RATES, 0.6, key, cfg,
+                                        telemetry=TCFG)
+        assert _res_equal(r0, r1), algo
+
+
+# ---------------------------------------------------------------------------
+# Contract 2: one shared TelemetryConfig keeps the one-compile sweep
+# ---------------------------------------------------------------------------
+
+
+def test_trace_count_stays_one_across_scenario_sweep_with_telemetry():
+    from repro.scenarios import canonical_a_max, canonical_pad
+    cluster = Cluster(M=16, K=4)
+    # distinctive cfg: the trace counter is process-global, so reuse of
+    # another test's signature would undercount, and collisions overcount
+    cfg = SimConfig(T=509, warmup=101, s_max=16)
+    pad = canonical_pad(cluster)
+    a_max = canonical_a_max(cluster, RATES, cfg, 0.6)
+    reset_trace_count()
+    for scen in ("uniform", "slow_rack", "flash_crowd"):
+        simulate_grid_with_telemetry(
+            "balanced_pandas_pod", cluster, RATES, [0.3, 0.6], 2, cfg,
+            scenario=scen, pad=pad, a_max=a_max, telemetry=TCFG)
+    assert trace_count() == 1
+
+
+# ---------------------------------------------------------------------------
+# Window accounting: telemetry sums == the RawSums the SimResult came from
+# ---------------------------------------------------------------------------
+
+
+def test_window_totals_match_simresult_when_warmup_aligned():
+    # warmup = 16 windows exactly (T=2048, W=64 -> window_len 32), so the
+    # measured-slot accumulators and the measured windows cover the same
+    # slots and the totals must agree to float32 accumulation error.
+    cfg = SimConfig(T=2_048, warmup=512)
+    r, tele = simulate_with_telemetry(
+        "balanced_pandas_pod", CLUSTER, RATES, 0.6, jax.random.PRNGKey(3),
+        cfg, telemetry=TCFG)
+    win = np.asarray(tele.win, np.float64)
+    wl = TCFG.window_len(cfg.T)
+    assert cfg.warmup % wl == 0
+    w0 = cfg.warmup // wl
+    slots = win[w0:, 0].sum()
+    assert slots == cfg.T - cfg.warmup
+    mean_N = win[w0:, 1].sum() / slots
+    assert np.isclose(mean_N, float(r.mean_tasks_in_system), rtol=1e-4)
+    thr = win[w0:, 5].sum() / slots
+    assert np.isclose(thr, float(r.throughput), rtol=1e-4)
+    util = win[w0:, 6].sum() / (slots * CLUSTER.M)
+    assert np.isclose(util, float(r.utilization), rtol=1e-4)
+    # drift from the same ring is finite and near 1 at moderate load
+    d = windowed_drift(tele, TCFG, cfg.T, cfg.warmup)
+    assert np.isfinite(d) and 0.5 < d < 1.6
+
+
+# ---------------------------------------------------------------------------
+# Sojourn histogram vs refsim's exact per-task sojourns
+# ---------------------------------------------------------------------------
+
+
+def test_sojourn_percentiles_match_refsim_within_5pct():
+    T, warmup, load = 12_000, 3_000, 0.45
+    ref = simulate_bp_ref(CLUSTER, RATES, load, T=T, warmup=warmup, seed=0)
+    cfg = SimConfig(T=T, warmup=warmup)
+    _, tele = simulate_with_telemetry(
+        "balanced_pandas", CLUSTER, RATES, load, jax.random.PRNGKey(0),
+        cfg, telemetry=TCFG)
+    got = sojourn_percentiles(tele, TCFG, ps=(50, 95))
+    assert got["dropped"] == 0.0
+    assert got["n"] > 1_000
+    exact = np.percentile(ref.sojourns, [50, 95])
+    for key, want in zip(("p50", "p95"), exact):
+        err = abs(got[key] - want) / want
+        assert err < 0.05, (key, got[key], want)
+
+
+def test_sojourn_histogram_empty_for_fcfs():
+    cfg = SimConfig(T=800, warmup=200)
+    _, tele = simulate_with_telemetry(
+        "fcfs", CLUSTER, RATES, 0.3, jax.random.PRNGKey(2), cfg,
+        telemetry=TCFG)
+    assert float(np.asarray(tele.sojourn_hist).sum()) == 0.0
+    sp = sojourn_percentiles(tele, TCFG)
+    assert np.isnan(sp["p50"])
+
+
+def test_ring_overflow_drops_records_not_tasks():
+    # cap=1 forces overflow at any queueing; the dynamics must not change
+    # and drops must be counted
+    tiny = TelemetryConfig(ring_cap=1)
+    cfg = SimConfig(T=1_500, warmup=400)
+    key = jax.random.PRNGKey(7)
+    r0 = simulate("balanced_pandas_pod", CLUSTER, RATES, 0.8, key, cfg)
+    r1, tele = simulate_with_telemetry(
+        "balanced_pandas_pod", CLUSTER, RATES, 0.8, key, cfg, telemetry=tiny)
+    assert _res_equal(r0, r1)
+    assert float(np.asarray(tele.sojourn_dropped)) > 0
+
+
+# ---------------------------------------------------------------------------
+# Probe quality
+# ---------------------------------------------------------------------------
+
+
+def test_full_bp_probe_rank_is_zero():
+    # full Balanced-Pandas IS the O(M) oracle: every decision has rank 0
+    cfg = SimConfig(T=1_000, warmup=200)
+    _, tele = simulate_with_telemetry(
+        "balanced_pandas", CLUSTER, RATES, 0.6, jax.random.PRNGKey(1), cfg,
+        telemetry=TCFG)
+    s = probe_summary(tele)
+    assert s["decisions"] > 0
+    assert s["mean_rank"] == 0.0
+    assert s["mean_regret"] == 0.0
+
+
+def test_bp_pod_probe_rank_decreases_with_d():
+    cfg = SimConfig(T=2_500, warmup=600)
+    ranks = {}
+    for pod in (PodSpec(1, 2), PodSpec(4, 12)):
+        _, tele = simulate_with_telemetry(
+            "balanced_pandas_pod", CLUSTER, RATES, 0.6,
+            jax.random.PRNGKey(9), cfg, pod=pod, telemetry=TCFG)
+        ranks[pod.d] = probe_summary(tele)
+    assert ranks[3]["mean_rank"] > ranks[16]["mean_rank"]
+    assert ranks[3]["mean_regret"] > ranks[16]["mean_regret"]
+
+
+def test_jsq_mw_pod_probe_rank_decreases_with_d():
+    cfg = SimConfig(T=2_500, warmup=600)
+    ranks = {}
+    for pod in (PodSpec(1, 2), PodSpec(4, 12)):
+        _, tele = simulate_with_telemetry(
+            "jsq_maxweight_pod", CLUSTER, RATES, 0.6,
+            jax.random.PRNGKey(9), cfg, pod=pod, telemetry=TCFG)
+        ranks[pod.d] = probe_summary(tele)
+    assert ranks[3]["mean_rank"] > ranks[16]["mean_rank"]
+
+
+# ---------------------------------------------------------------------------
+# Histogram convention + percentile accuracy
+# ---------------------------------------------------------------------------
+
+
+def test_hist_percentiles_within_bin_width():
+    rng = np.random.default_rng(0)
+    x = rng.lognormal(3.0, 0.8, size=20_000)
+    h = np_hist(x)
+    got = percentiles(h, (50, 95, 99))
+    want = np.percentile(x, [50, 95, 99])
+    for g, w in zip(got, want):
+        assert abs(g - w) / w < 0.06, (g, w)   # ~bin width at 8 bins/octave
+
+
+def test_hist_empty_gives_nan():
+    assert np.isnan(percentiles(np.zeros(128), (50,))[0])
+
+
+# ---------------------------------------------------------------------------
+# Export: JSONL events, schema validation, clip warning
+# ---------------------------------------------------------------------------
+
+
+def test_jsonl_roundtrip_and_schema(tmp_path):
+    cfg = SimConfig(T=1_024, warmup=256)
+    _, tele = simulate_with_telemetry(
+        "balanced_pandas_pod", CLUSTER, RATES, 0.5, jax.random.PRNGKey(4),
+        cfg, telemetry=TCFG)
+    events = to_events(tele, TCFG, cfg.T, cfg.warmup,
+                       manifest=run_manifest(algo="balanced_pandas_pod",
+                                             load=0.5, seeds=1))
+    assert validate_events(events) == []
+    p = tmp_path / "m.jsonl"
+    write_jsonl(str(p), events, append=False)
+    back = read_jsonl(str(p))
+    assert back == json.loads(json.dumps(events))  # numeric-type stable
+    # window rows cover every slot once
+    rows = [e for e in back if e["event"] == "window"]
+    assert sum(r["slots"] for r in rows) == cfg.T
+    # tampering is caught
+    bad = [dict(e) for e in events]
+    del bad[0]["schema"]
+    bad.append({"event": "mystery"})
+    errs = validate_events(bad)
+    assert len(errs) >= 2
+
+
+def test_grid_telemetry_aggregates_over_batch_axes():
+    cfg = SimConfig(T=512, warmup=128)
+    _, tele = simulate_grid_with_telemetry(
+        "balanced_pandas_pod", CLUSTER, RATES, [0.3, 0.5], 2, cfg,
+        telemetry=TCFG)
+    assert np.asarray(tele.win).shape[:2] == (2, 2)
+    agg = aggregate(tele)
+    win = np.asarray(agg.win)
+    assert win.ndim == 2
+    assert win[:, 0].sum() == 4 * cfg.T           # seeds x loads x slots
+    rows = window_records(agg, TCFG, cfg.T)
+    assert rows and all(r["slots"] > 0 for r in rows)
+
+
+def test_clip_warning_formatting():
+    assert format_clip_warning([("a", 0.0), ("b", 0.0)]) is None
+    w = format_clip_warning([("cell_a", 0.0), ("cell_b", 2e-3)])
+    assert "cell_b" in w and "WARNING" in w and "cell_a" not in w
