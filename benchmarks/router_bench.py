@@ -91,16 +91,35 @@ def _probe_quality(preset) -> dict:
     return out
 
 
-def _append_datapoint(point: dict) -> None:
+def _append_datapoint(point: dict, path: str = None) -> None:
+    """Append one run to the trajectory file.
+
+    A corrupt/unreadable trajectory is NEVER silently clobbered: the bad
+    file is preserved at ``<path>.bad`` and the append fails loudly — perf
+    history is the whole point of this file, losing it quietly on a
+    truncated write or merge-conflict marker defeats PR-over-PR tracking.
+    """
+    path = path or BENCH_PATH
     data = {"schema": 1, "runs": []}
-    if os.path.exists(BENCH_PATH):
+    if os.path.exists(path):
         try:
-            with open(BENCH_PATH) as f:
+            with open(path) as f:
                 data = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            pass
-    data.setdefault("runs", []).append(point)
-    with open(BENCH_PATH, "w") as f:
+        except (json.JSONDecodeError, OSError) as e:
+            bad = path + ".bad"
+            os.replace(path, bad)
+            raise RuntimeError(
+                f"{path} is corrupt or unreadable ({e}); moved it to {bad} "
+                "instead of overwriting the perf trajectory — inspect/"
+                "restore it, then re-run") from e
+        if not isinstance(data.get("runs"), list):
+            bad = path + ".bad"
+            os.replace(path, bad)
+            raise RuntimeError(
+                f"{path} parsed but has no 'runs' list; moved it to {bad} "
+                "instead of overwriting the perf trajectory")
+    data["runs"].append(point)
+    with open(path, "w") as f:
         json.dump(data, f, indent=1)
         f.write("\n")
 

@@ -1,0 +1,60 @@
+"""Loose perf-regression gate over the BENCH_router.json trajectory.
+
+Compares the LAST run (the datapoint CI just appended) against the most
+recent EARLIER run with the same preset — i.e. the latest committed
+datapoint — and fails if any algorithm's slots_per_s fell by more than
+2x.  The 2x bar is deliberately loose: CI runners are noisy and the
+Pallas interpreter's wall-clock jitters, so this gate only catches real
+regressions (a kernel accidentally falling off the fused path, an
+added host round-trip per slot), not scheduling noise.
+
+Usage: python scripts/check_router_bench.py [BENCH_router.json]
+Exit 0 on pass (or nothing to compare against), 1 on regression.
+"""
+import json
+import os
+import sys
+
+FACTOR = 2.0
+
+
+def main(path: str) -> int:
+    with open(path) as f:
+        data = json.load(f)
+    runs = data.get("runs", [])
+    if not runs:
+        print(f"[check_router_bench] {path}: no runs — nothing to gate")
+        return 0
+    fresh = runs[-1]
+    prior = [r for r in runs[:-1] if r.get("preset") == fresh.get("preset")]
+    if not prior:
+        print(f"[check_router_bench] no earlier '{fresh.get('preset')}' "
+              "datapoint — nothing to gate against")
+        return 0
+    base = prior[-1]
+    failed = False
+    for algo, cur in fresh.get("throughput", {}).items():
+        ref = base.get("throughput", {}).get(algo)
+        if ref is None:
+            print(f"[check_router_bench] {algo:22s} new algorithm, skipped")
+            continue
+        cur_s, ref_s = cur["slots_per_s"], ref["slots_per_s"]
+        ratio = cur_s / max(ref_s, 1e-9)
+        ok = cur_s * FACTOR >= ref_s
+        mark = "ok  " if ok else "FAIL"
+        print(f"[check_router_bench] {mark} {algo:22s} "
+              f"{cur_s:12.0f} slots/s vs {ref_s:12.0f} committed "
+              f"({ratio:5.2f}x, gate {1 / FACTOR:.2f}x)")
+        failed |= not ok
+    if failed:
+        print(f"[check_router_bench] slots_per_s regressed past {FACTOR}x "
+              f"vs the latest committed '{fresh.get('preset')}' datapoint "
+              f"({base.get('date')})")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    default = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_router.json")
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else default))

@@ -66,10 +66,11 @@ def masked_draws(key: jax.Array, set_mask: jnp.ndarray, k: int) -> tuple[jnp.nda
     total = csum[..., -1]
     u = jax.random.randint(key, set_mask.shape[:-1] + (k,), 0,
                            jnp.maximum(total, 1)[..., None])
-    flat_c = csum.reshape(-1, csum.shape[-1])
-    flat_u = u.reshape(-1, k)
-    idx = jax.vmap(lambda c, uu: jnp.searchsorted(c, uu, side="right"))(flat_c, flat_u)
-    idx = idx.reshape(u.shape).astype(jnp.int32)
+    # searchsorted(csum, u, 'right') == #(csum <= u): one fused counting op
+    # over [..., k, M] instead of a vmapped binary search (hot path: every
+    # pod-candidate draw, every slot)
+    idx = jnp.sum((csum[..., None, :] <= u[..., :, None]).astype(jnp.int32),
+                  axis=-1)
     valid = jnp.broadcast_to((total > 0)[..., None], idx.shape)
     return jnp.minimum(idx, set_mask.shape[-1] - 1), valid
 

@@ -26,11 +26,23 @@ because routing masks dead servers by their flag, never by their W.
 """
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 CLASSES = 3
 WIDTH = 8          # padded lane width: [rates 0..2 | 0 | flags 4..6 | 0]
 FLAG_BASE = 4
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Shared ``interpret`` auto-default for every kernel in this package:
+    None -> Pallas interpreter everywhere except a real TPU backend (where
+    the same call compiles to Mosaic).  Explicit True/False pass through."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
 def as_matrix(inv_rates: jnp.ndarray, M: int) -> jnp.ndarray:

@@ -1,9 +1,10 @@
 """Jit'd public wrappers for the scheduler kernels.
 
-``interpret`` defaults to True off-TPU (the Pallas interpreter executes the
-kernel body on CPU for correctness); on a real TPU backend the same calls
-compile to Mosaic.  The wrappers here are what the production router
-(repro.sched.router) calls.
+``interpret`` auto-selects: the Pallas interpreter executes the kernel
+body on CPU for correctness off-TPU; on a real TPU backend the same calls
+compile to Mosaic.  Pass ``interpret=True/False`` explicitly to override.
+The wrappers here are what the production router (repro.sched.router)
+calls.
 """
 from __future__ import annotations
 
@@ -12,6 +13,7 @@ import jax.numpy as jnp
 
 from .pod_route import pod_route as _pod_route
 from .queue_update import queue_update as _queue_update
+from .route_commit import route_commit as _route_commit
 from .weighted_argmin import weighted_argmin as _weighted_argmin
 
 
@@ -36,3 +38,12 @@ def queue_update(Q, sel, sel_cls, valid, inv_rates, **kw):
     kernels/queue_update.py)."""
     kw.setdefault("interpret", _interpret_default())
     return _queue_update(Q, sel, sel_cls, valid, inv_rates, **kw)
+
+
+def route_commit(Q, valid, inv_rates, **kw):
+    """Fused score -> route -> queue-commit of one arrival batch with
+    in-kernel sequential conflict resolution (see kernels/route_commit.py).
+    Full variant via ``cls=[B, M]``; pod variant via
+    ``cand_idx/cand_cls/cand_valid=[B, C]``."""
+    kw.setdefault("interpret", _interpret_default())
+    return _route_commit(Q, valid, inv_rates, **kw)

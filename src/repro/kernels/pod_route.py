@@ -29,13 +29,15 @@ rather than ``0 * inf = NaN``.  Oracle: ref.pod_route_ref.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .invrates import FLAG_BASE, WIDTH, encode
+from .invrates import FLAG_BASE, WIDTH, encode, resolve_interpret
 
 LANE = 128
 
@@ -82,7 +84,8 @@ def _kernel(w_ref, idx_ref, cls_ref, valid_ref, invm_ref, sel_ref, val_ref,
 @functools.partial(jax.jit, static_argnames=("b_tile", "interpret"))
 def pod_route(W: jnp.ndarray, cand_idx: jnp.ndarray, cand_cls: jnp.ndarray,
               valid: jnp.ndarray, inv_rates: jnp.ndarray, *,
-              b_tile: int = 8, interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+              b_tile: int = 8,
+              interpret: Optional[bool] = None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """See ref.pod_route_ref.  W: [M]; cand_idx/cand_cls: [B, C]; valid: [B, C];
     inv_rates: [3] homogeneous or [M, 3] per-server (entries may be +inf for
     zero-rate servers — masked to +inf scores, never NaN).
@@ -123,6 +126,6 @@ def pod_route(W: jnp.ndarray, cand_idx: jnp.ndarray, cand_cls: jnp.ndarray,
             jax.ShapeDtypeStruct((Bp,), jnp.int32),
             jax.ShapeDtypeStruct((Bp,), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(W_p, idx_p, cls_p, valid_p, invm)
     return sel[:B], val[:B]

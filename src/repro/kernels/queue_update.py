@@ -21,13 +21,15 @@ Oracle: ref.queue_update_ref.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .invrates import WIDTH, encode
+from .invrates import WIDTH, encode, resolve_interpret
 
 LANE = 128
 
@@ -61,7 +63,7 @@ def _kernel(q_ref, sel_ref, cls_ref, valid_ref, invr_ref, qout_ref, w_ref,
 @functools.partial(jax.jit, static_argnames=("m_tile", "interpret"))
 def queue_update(Q: jnp.ndarray, sel: jnp.ndarray, sel_cls: jnp.ndarray,
                  valid: jnp.ndarray, inv_rates: jnp.ndarray, *,
-                 m_tile: int = 4 * LANE, interpret: bool = True
+                 m_tile: int = 4 * LANE, interpret: Optional[bool] = None
                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """See ref.queue_update_ref.  Q: [M, 3] int32; sel/sel_cls/valid: [B];
     inv_rates: [3] homogeneous or [M, 3] per-server (non-finite entries
@@ -99,6 +101,6 @@ def queue_update(Q: jnp.ndarray, sel: jnp.ndarray, sel_cls: jnp.ndarray,
             jax.ShapeDtypeStruct((Mp, 8), jnp.int32),
             jax.ShapeDtypeStruct((Mp, 1), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q_p, sel_p, cls_p, valid_p, invr)
     return q_new[:M, :3], W[:M, 0]

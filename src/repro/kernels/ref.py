@@ -2,7 +2,10 @@
 
 These define the exact semantics the Pallas kernels must reproduce
 (tests/test_kernels.py sweeps shapes & dtypes and asserts allclose / exact
-index equality).  Tie-breaking contract everywhere: lowest index wins.
+index equality).  Tie-breaking contract: lowest index wins for the three
+legacy snapshot kernels; the fused ``route_commit`` megakernel instead
+breaks exact score ties by locality class first (LOCAL < RACK < REMOTE),
+then lowest server index / candidate slot — see ``route_commit_ref``.
 
 Inverse-rate operand (all three oracles): either the homogeneous ``[3]``
 vector (every server identical) or a per-server ``[M, 3]`` matrix
@@ -14,6 +17,9 @@ contributing 0 workload (routing never consults a dead server's W).
 """
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 
@@ -91,3 +97,126 @@ def queue_update_ref(Q: jnp.ndarray, sel: jnp.ndarray, sel_cls: jnp.ndarray,
     inv = jnp.where(jnp.isfinite(inv), inv, 0.0)
     W = (Q_new.astype(jnp.float32) * inv).sum(-1)
     return Q_new, W
+
+
+def _finite_dead(inv_rates: jnp.ndarray, M: int):
+    """(finite reciprocal rates [M, 3], dead mask [M, 3]) — the oracle-side
+    mirror of the kernels' invrates encoding."""
+    inv = jnp.asarray(inv_rates, jnp.float32)
+    if inv.ndim == 1:
+        inv = jnp.broadcast_to(inv[None, :], (M, 3))
+    finite = jnp.isfinite(inv)
+    return jnp.where(finite, inv, 0.0), ~finite
+
+
+_RANK_BIG = jnp.int32(2**30)
+
+
+def route_commit_ref(Q: jnp.ndarray, valid: jnp.ndarray,
+                     inv_rates: jnp.ndarray, *,
+                     cls: Optional[jnp.ndarray] = None,
+                     prio: Optional[jnp.ndarray] = None,
+                     cand_idx: Optional[jnp.ndarray] = None,
+                     cand_cls: Optional[jnp.ndarray] = None,
+                     cand_valid: Optional[jnp.ndarray] = None):
+    """Sequential-commit routing oracle for the route_commit megakernel.
+
+    Routes arrivals IN ORDER: arrival b scores against ``W0 + dW`` where
+    ``dW`` holds the commits of arrivals ``0..b-1`` (``+inv_rates[sel,
+    cls]`` each, 0 for dead servers) — the paper's per-arrival model, not
+    a shared snapshot.  Scores are ``(W0 + dW) * inv_rates[m, cls]`` with
+    dead / invalid entries masked to ``+inf`` after the multiply.  Exact
+    ties break by locality class first, then the optional per-server
+    ``prio`` lane (full variant; lower wins — a random permutation gives
+    the unbiased ties the sequential path uses), then lowest server index
+    (full variant, ``cls [B, M]``) or lowest candidate slot (pod variant,
+    ``cand_idx``/``cand_cls``/``cand_valid [B, C]``; invalid slots lose
+    every tie and can only win when every slot scores ``+inf``).  Arrivals
+    with ``valid[b]`` False still receive a routing decision but commit
+    nothing.
+
+    Returns (Q_new [M, 3] int32, W_new [M] f32, sel [B] int32,
+    sel_cls [B] int32, val [B] f32).
+    """
+    M = Q.shape[0]
+    finite, dead = _finite_dead(inv_rates, M)
+    W0 = (Q.astype(jnp.float32) * finite).sum(-1)
+
+    if cls is not None:
+        m = jnp.arange(M, dtype=jnp.int32)
+        p = (m if prio is None else prio.astype(jnp.int32))
+
+        def step(dw, xs):
+            cls_b, v_b = xs
+            factor = finite[m, cls_b]
+            ok = (cls_b < 3) & ~dead[m, cls_b]
+            scores = jnp.where(ok, (W0 + dw) * factor, jnp.inf)
+            best = jnp.min(scores)
+            rank = jnp.where(scores == best,
+                             (cls_b * M + p) * M + m, _RANK_BIG)
+            rb = jnp.min(rank)
+            sel = (rb % M).astype(jnp.int32)
+            scls = (rb // (M * M)).astype(jnp.int32)
+            amt = finite[sel, jnp.minimum(scls, 2)] * (scls < 3)
+            dw = dw + jnp.where((m == sel) & v_b, amt, 0.0)
+            return dw, (sel, scls, best)
+
+        xs = (cls.astype(jnp.int32), jnp.asarray(valid, bool))
+    else:
+        assert cand_idx is not None and cand_cls is not None \
+            and cand_valid is not None
+        C = cand_idx.shape[1]
+        slot = jnp.arange(C, dtype=jnp.int32)
+        m = jnp.arange(M, dtype=jnp.int32)
+
+        def step(dw, xs):
+            ci, cc, cv, v_b = xs
+            factor = finite[ci, cc]
+            ok = (cv > 0) & (cc < 3) & ~dead[ci, cc]
+            scores = jnp.where(ok, (W0 + dw)[ci] * factor, jnp.inf)
+            best = jnp.min(scores)
+            rank = jnp.where(scores == best,
+                             cc * C + slot + (1 - cv) * 4 * C, _RANK_BIG)
+            s = (jnp.min(rank) % C).astype(jnp.int32)
+            sel = ci[s]
+            scls = cc[s]
+            dw = dw + jnp.where((m == sel) & v_b, factor[s], 0.0)
+            return dw, (sel, scls, best)
+
+        xs = (cand_idx.astype(jnp.int32), cand_cls.astype(jnp.int32),
+              jnp.asarray(cand_valid, jnp.int32),
+              jnp.asarray(valid, bool))
+
+    dw, (sel, scls, val) = jax.lax.scan(step, jnp.zeros(M, jnp.float32), xs)
+    v = jnp.asarray(valid, bool)
+    Q_new = Q + jnp.zeros_like(Q).at[sel, jnp.minimum(scls, 2)].add(
+        (v & (scls < 3)).astype(Q.dtype))
+    return Q_new, W0 + dw, sel, scls, val
+
+
+def route_commit_wseq(Q: jnp.ndarray, sel: jnp.ndarray, sel_cls: jnp.ndarray,
+                      valid: jnp.ndarray, inv_rates: jnp.ndarray) -> jnp.ndarray:
+    """Replay the PRE-commit workload each arrival routed against: [B, M].
+
+    Row b is ``W0 + (commits of arrivals 0..b-1)`` — exactly what
+    route_commit scored arrival b with.  Used by the telemetry probe hooks
+    to rank batched decisions against the evolving O(M) oracle instead of
+    a stale slot-start snapshot.
+    """
+    M = Q.shape[0]
+    finite, _ = _finite_dead(inv_rates, M)
+    W0 = (Q.astype(jnp.float32) * finite).sum(-1)
+    m = jnp.arange(M, dtype=jnp.int32)
+
+    def step(dw, xs):
+        s, c, v = xs
+        wpre = W0 + dw
+        amt = finite[s, jnp.minimum(c, 2)] * (c < 3)
+        dw = dw + jnp.where((m == s) & v, amt, 0.0)
+        return dw, wpre
+
+    _, wseq = jax.lax.scan(
+        step, jnp.zeros(M, jnp.float32),
+        (sel.astype(jnp.int32), sel_cls.astype(jnp.int32),
+         jnp.asarray(valid, bool)))
+    return wseq

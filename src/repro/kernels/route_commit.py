@@ -1,0 +1,372 @@
+"""Pallas TPU megakernel: fused score -> route -> queue-commit for a batch.
+
+The batched scheduler hot path used to be three HBM round-trips per slot:
+recompute W from Q, run ``pod_route``/``weighted_argmin`` over ONE workload
+snapshot, then scatter the commits back into Q on the host.  Snapshot
+routing has a correctness bug at bursty arrival rates — every arrival in
+the batch sees the same argmin, so a burst herds onto one server in a way
+the paper's sequential model (and GB-PANDAS) never does.
+
+This kernel fuses all three stages into one launch and resolves conflicts
+*inside* the batch: a W-delta accumulator lives in VMEM, and arrival b+1
+scores against workloads that already include arrival b's commit
+(``dW[sel] += inv_rates[sel, cls]`` per accepted arrival).  Semantics are
+the paper's per-arrival sequential routing, at batched launch cost.
+
+Two variants share the wrapper (``route_commit``):
+
+  full  (``cls``: [B, M])           — Balanced-Pandas O(M) argmin per
+        arrival over every server's weighted workload.
+  pod   (``cand_idx``/``cand_cls``/``cand_valid``: [B, C]) — power-of-d
+        argmin over an explicit candidate list (paper §IV-C); also serves
+        JSQ-style shortest-queue routing with unit rates (queue length ==
+        workload when every inverse rate is 1).
+
+Tie-break contract (the in-kernel class-priority lane)
+------------------------------------------------------
+Exact score ties resolve by locality class first (LOCAL < RACK < REMOTE),
+then — full variant — by an optional per-server integer priority ``prio``
+(lower wins; pass a random permutation for the unbiased random ties the
+sequential path and the event-accurate refsim use — W takes lattice
+values, ties are ROUTINE, and always-lowest-index ties hotspot low-index
+servers measurably), then by lowest server index.  The pod variant breaks
+class ties by lowest candidate slot; slots are randomly sampled, so slot
+order is already unbiased across slots.  The ranking is staged on
+integers — ``rank = (cls * Mp + prio) * Mp + index`` under the tie mask —
+so it is EXACT at any workload magnitude.  This replaces the old
+host-side ``W + _BP_TIE_EPS`` uniform lift, which f32 addition silently
+absorbed once W >> 1e-6 * ulp scale (W >~ 16), i.e. the documented class
+tie-break did not fire at exactly the high loads where it matters.  If no
+candidate has a finite score (all dead / invalid), the same ranking still
+yields a deterministic pick (lowest class, then priority/index, valid
+slots preferred) and the W commit is 0 (dead entries carry finite rate 0
+in the encoding).
+
+TPU mapping: one launch, whole operands VMEM-resident (the wrapper pads M
+to 128 lanes, B and C to multiples of 8).  The heavy work — the initial
+workload recompute ``W0 = sum(Q * inv)``, the pod candidate gather
+(one-hot matmul, same formulation as pod_route), and the final Q scatter
+(``one_hot(sel)^T @ one_hot(cls)`` on the MXU, same as queue_update) — is
+batch-parallel; only the light argmin + rank-1 W-delta update runs in the
+sequential ``fori_loop`` over arrivals.  VMEM high-water is the pod
+variant's one-hot gather, ~B*C*Mp*4 bytes (B=64, C=16, M=8192 -> 32 MiB;
+tile the batch on the host above that).
+
+``interpret=None`` (default) auto-selects the Pallas interpreter off-TPU;
+on a TPU backend the same call compiles to Mosaic.
+Oracle: ref.route_commit_ref (exact sequential-commit semantics).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .invrates import FLAG_BASE, WIDTH, encode, resolve_interpret
+
+LANE = 128
+_BIG = 2**30  # tie-rank sentinel (fits int32; plain int so kernels close over no arrays)
+
+
+def _class_select(sel_key, per_class):
+    """per_class[c] broadcast-selected by ``sel_key`` in {0,1,2}."""
+    return jnp.where(sel_key == 0, per_class[0],
+                     jnp.where(sel_key == 1, per_class[1], per_class[2]))
+
+
+def _commit_q(q, sel_v, cls_v, mask, b_pad, m_pad):
+    """dQ = one_hot(sel)^T @ one_hot(cls) over accepted arrivals (the
+    queue_update formulation — collision-free on the MXU)."""
+    iota_bm = jax.lax.broadcasted_iota(jnp.int32, (b_pad, m_pad), 1)
+    oh_sel = ((iota_bm == sel_v.reshape(b_pad, 1))
+              & (mask.reshape(b_pad, 1) > 0)).astype(jnp.float32)
+    iota_bc = jax.lax.broadcasted_iota(jnp.int32, (b_pad, 8), 1)
+    oh_cls = (iota_bc == cls_v.reshape(b_pad, 1)).astype(jnp.float32)
+    dq = jax.lax.dot_general(oh_sel, oh_cls, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    return (q + dq).astype(jnp.int32)
+
+
+def _kernel_full(q_ref, cls_ref, mask_ref, invm_ref, prio_ref,
+                 qout_ref, wout_ref, sel_ref, selcls_ref, val_ref,
+                 *, m_pad: int, b_pad: int):
+    q = q_ref[...].astype(jnp.float32)           # [Mp, 8] (3 cols used)
+    cls = cls_ref[...]                           # [Bp, Mp] (pad rows: 3)
+    mask = mask_ref[...]                         # [1, Bp]  (commit gate)
+    ir = invm_ref[...]                           # [Mp, 8] (see invrates)
+    prio = prio_ref[...]                         # [1, Mp] tie priority < Mp
+
+    # fused workload recompute: flag cols multiply the zero pad cols of q
+    w0 = jnp.sum(q * ir, axis=1)[None, :]        # [1, Mp]
+    rates = [ir[:, k][None, :] for k in range(3)]
+    flags = [ir[:, FLAG_BASE + k][None, :] for k in range(3)]
+    factor = _class_select(cls, rates)           # [Bp, Mp] finite 1/rate
+    elig = ((cls < 3) & (_class_select(cls, flags) == 0.0)).astype(jnp.int32)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (b_pad, 1), 0)
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (1, m_pad), 1)
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (1, b_pad), 1)
+
+    # arrivals past the last committing (valid) one never change dW — the
+    # sequential loop only needs to run that far; everything after is one
+    # vectorized tail pass against the final dW.  Typical batches are
+    # Poisson draws far below the a_max padding, so this cuts the
+    # sequential trip count from Bp to ~E[arrivals].
+    n_proc = jnp.max(jnp.where(mask > 0, iota_b + 1, 0))
+
+    def cond(carry):
+        return carry[0] < n_proc
+
+    def body(carry):
+        b, dw, sel_v, cls_v, val_v = carry
+        row = rows == b
+        # mask-reduce row b out of the batch blocks (static shapes: no
+        # dynamic slicing inside the loop)
+        cls_b = jnp.sum(jnp.where(row, cls, 0), axis=0, keepdims=True)
+        fac_b = jnp.sum(jnp.where(row, factor, 0.0), axis=0, keepdims=True)
+        ok_b = jnp.sum(jnp.where(row, elig, 0), axis=0, keepdims=True) > 0
+        # arrival b scores against W0 + the commits of arrivals 0..b-1
+        scores = jnp.where(ok_b, (w0 + dw) * fac_b, jnp.inf)
+        best = jnp.min(scores)
+        # tie-break lane: class, then priority, then index — exact integer
+        # ranking, no epsilon (fits int32: wrapper asserts 4*Mp^2 < _BIG)
+        rank = jnp.where(scores == best,
+                         (cls_b * m_pad + prio) * m_pad + iota_m, _BIG)
+        rb = jnp.min(rank)
+        sel = rb % m_pad
+        scls = rb // (m_pad * m_pad)
+        accept = jnp.sum(jnp.where(iota_b == b, mask, 0)) > 0
+        # W-delta accumulator: the committed task adds 1/rate at (sel, cls)
+        # (0 for a dead server — finite encoding carries 0 there)
+        dw = dw + jnp.where((iota_m == sel) & accept, fac_b, 0.0)
+        onb = iota_b == b
+        return (b + 1, dw, jnp.where(onb, sel, sel_v),
+                jnp.where(onb, scls, cls_v), jnp.where(onb, best, val_v))
+
+    init = (jnp.int32(0),
+            jnp.zeros((1, m_pad), jnp.float32),
+            jnp.zeros((1, b_pad), jnp.int32),
+            jnp.zeros((1, b_pad), jnp.int32),
+            jnp.zeros((1, b_pad), jnp.float32))
+    _, dw, sel_v, cls_v, val_v = jax.lax.while_loop(cond, body, init)
+
+    # vectorized tail: arrivals b >= n_proc (all invalid) score against
+    # the final dW — identical semantics to running the loop to Bp
+    scores_t = jnp.where(elig > 0, (w0 + dw) * factor, jnp.inf)  # [Bp, Mp]
+    best_t = jnp.min(scores_t, axis=1, keepdims=True)            # [Bp, 1]
+    rank_t = jnp.where(scores_t == best_t,
+                       (cls * m_pad + prio) * m_pad + iota_m, _BIG)
+    rb_t = jnp.min(rank_t, axis=1, keepdims=True)
+    done = iota_b < n_proc
+    sel_v = jnp.where(done, sel_v, (rb_t % m_pad).reshape(1, b_pad))
+    cls_v = jnp.where(done, cls_v,
+                      (rb_t // (m_pad * m_pad)).reshape(1, b_pad))
+    val_v = jnp.where(done, val_v, best_t.reshape(1, b_pad))
+
+    qout_ref[...] = _commit_q(q, sel_v, cls_v, mask, b_pad, m_pad)
+    wout_ref[...] = (w0 + dw).reshape(m_pad, 1)
+    sel_ref[...] = sel_v
+    selcls_ref[...] = cls_v
+    val_ref[...] = val_v
+
+
+def _kernel_pod(q_ref, idx_ref, cls_ref, cval_ref, mask_ref, invm_ref,
+                qout_ref, wout_ref, sel_ref, selcls_ref, val_ref,
+                *, m_pad: int, c_pad: int, b_pad: int, homogeneous: bool):
+    q = q_ref[...].astype(jnp.float32)           # [Mp, 8]
+    cand = idx_ref[...]                          # [Bp, Cp]
+    ccls = cls_ref[...]                          # [Bp, Cp] (pad: 3)
+    cval = cval_ref[...]                         # [Bp, Cp] int 0/1
+    mask = mask_ref[...]                         # [1, Bp]
+    ir = invm_ref[...]                           # [Mp, 8]
+
+    w0 = jnp.sum(q * ir, axis=1)[None, :]        # [1, Mp]
+    # candidate one-hot (the pod_route formulation): serves the workload
+    # gathers (w0 + dW, fused into one dot each) and — heterogeneous
+    # fleets only — the per-candidate rate/flag gather.
+    flat = cand.reshape(b_pad * c_pad, 1)
+    iota_mm = jax.lax.broadcasted_iota(jnp.int32, (b_pad * c_pad, m_pad), 1)
+    onehot = (iota_mm == flat).astype(jnp.float32)           # [B*C, Mp]
+    if homogeneous:
+        # every row of ir is identical: the per-candidate rate is a pure
+        # function of the class — no [B*C, Mp] x [Mp, 8] gather matmul
+        factor = _class_select(ccls, [ir[0, 0], ir[0, 1], ir[0, 2]])
+        dead = _class_select(ccls, [ir[0, FLAG_BASE], ir[0, FLAG_BASE + 1],
+                                    ir[0, FLAG_BASE + 2]])
+    else:
+        irc = jax.lax.dot_general(onehot, ir, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        col = lambda k: irc[:, k].reshape(b_pad, c_pad)
+        factor = _class_select(ccls, [col(0), col(1), col(2)])
+        dead = _class_select(ccls, [col(FLAG_BASE), col(FLAG_BASE + 1),
+                                    col(FLAG_BASE + 2)])
+    elig = ((cval > 0) & (ccls < 3) & (dead == 0.0)).astype(jnp.int32)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (b_pad, 1), 0)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (1, c_pad), 1)
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (1, m_pad), 1)
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (1, b_pad), 1)
+    iota_cm = jax.lax.broadcasted_iota(jnp.int32, (c_pad, m_pad), 1)
+
+    # sequential work stops after the last valid arrival (see _kernel_full)
+    n_proc = jnp.max(jnp.where(mask > 0, iota_b + 1, 0))
+
+    def cond(carry):
+        return carry[0] < n_proc
+
+    def body(carry):
+        b, dw, sel_v, cls_v, val_v = carry       # dw: [1, Mp]
+        row = rows == b
+        ccls_b = jnp.sum(jnp.where(row, ccls, 0), axis=0, keepdims=True)
+        cand_b = jnp.sum(jnp.where(row, cand, 0), axis=0, keepdims=True)
+        cval_b = jnp.sum(jnp.where(row, cval, 0), axis=0, keepdims=True)
+        fac_b = jnp.sum(jnp.where(row, factor, 0.0), axis=0, keepdims=True)
+        ok_b = jnp.sum(jnp.where(row, elig, 0), axis=0, keepdims=True) > 0
+        # row-b candidate view of W0 + the intra-batch commits so far: one
+        # small [Cp, Mp] one-hot gather (NOT the whole [B*C, Mp] block per
+        # step, and w0 rides along in the same dot)
+        oh_b = (iota_cm == cand_b.reshape(c_pad, 1)).astype(jnp.float32)
+        wc_b = jax.lax.dot_general(
+            oh_b, w0 + dw, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(1, c_pad)
+        scores = jnp.where(ok_b, wc_b * fac_b, jnp.inf)
+        best = jnp.min(scores)
+        # class lane, then slot order; invalid slots only as a last resort
+        rank = jnp.where(scores == best,
+                         ccls_b * c_pad + iota_c + (1 - cval_b) * 4 * c_pad,
+                         _BIG)
+        slot = jnp.min(rank) % c_pad
+        slot_oh = iota_c == slot
+        sel = jnp.sum(jnp.where(slot_oh, cand_b, 0))
+        scls = jnp.sum(jnp.where(slot_oh, ccls_b, 0))
+        amt = jnp.sum(jnp.where(slot_oh, fac_b, 0.0))
+        accept = jnp.sum(jnp.where(iota_b == b, mask, 0)) > 0
+        dw = dw + jnp.where((iota_m == sel) & accept, amt, 0.0)
+        onb = iota_b == b
+        return (b + 1, dw, jnp.where(onb, sel, sel_v),
+                jnp.where(onb, scls, cls_v), jnp.where(onb, best, val_v))
+
+    init = (jnp.int32(0),
+            jnp.zeros((1, m_pad), jnp.float32),
+            jnp.zeros((1, b_pad), jnp.int32),
+            jnp.zeros((1, b_pad), jnp.int32),
+            jnp.zeros((1, b_pad), jnp.float32))
+    _, dw, sel_v, cls_v, val_v = jax.lax.while_loop(cond, body, init)
+
+    # vectorized tail for arrivals past the last valid one: all score
+    # against the final dW (one whole-batch gather via the big one-hot)
+    wc = jax.lax.dot_general(
+        onehot, w0 + dw, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(b_pad, c_pad)
+    scores_t = jnp.where(elig > 0, wc * factor, jnp.inf)
+    best_t = jnp.min(scores_t, axis=1, keepdims=True)            # [Bp, 1]
+    iota_bc = jax.lax.broadcasted_iota(jnp.int32, (b_pad, c_pad), 1)
+    rank_t = jnp.where(scores_t == best_t,
+                       ccls * c_pad + iota_bc + (1 - cval) * 4 * c_pad,
+                       _BIG)
+    slot_t = jnp.min(rank_t, axis=1, keepdims=True) % c_pad      # [Bp, 1]
+    slot_oh_t = iota_bc == slot_t
+    sel_t = jnp.sum(jnp.where(slot_oh_t, cand, 0), axis=1, keepdims=True)
+    scls_t = jnp.sum(jnp.where(slot_oh_t, ccls, 0), axis=1, keepdims=True)
+    done = iota_b < n_proc
+    sel_v = jnp.where(done, sel_v, sel_t.reshape(1, b_pad))
+    cls_v = jnp.where(done, cls_v, scls_t.reshape(1, b_pad))
+    val_v = jnp.where(done, val_v, best_t.reshape(1, b_pad))
+
+    qout_ref[...] = _commit_q(q, sel_v, cls_v, mask, b_pad, m_pad)
+    wout_ref[...] = (w0 + dw).reshape(m_pad, 1)
+    sel_ref[...] = sel_v
+    selcls_ref[...] = cls_v
+    val_ref[...] = val_v
+
+
+def _pad_q(Q, Mp):
+    return jnp.pad(Q.astype(jnp.int32), ((0, Mp - Q.shape[0]), (0, 5)))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def route_commit(Q: jnp.ndarray, valid: jnp.ndarray, inv_rates: jnp.ndarray,
+                 *, cls: Optional[jnp.ndarray] = None,
+                 prio: Optional[jnp.ndarray] = None,
+                 cand_idx: Optional[jnp.ndarray] = None,
+                 cand_cls: Optional[jnp.ndarray] = None,
+                 cand_valid: Optional[jnp.ndarray] = None,
+                 interpret: Optional[bool] = None):
+    """Fused sequential-commit routing of one arrival batch.
+
+    Q: [M, 3] int32 sub-queue lengths; valid: [B] bool arrival/commit mask;
+    inv_rates: [3] homogeneous or [M, 3] per-server (+inf = dead, masked
+    to +inf scores after the multiply, never NaN).  Exactly one of:
+
+      cls       [B, M] int32  — full variant (argmin over all M)
+      cand_idx/cand_cls/cand_valid [B, C] — pod variant (candidate list)
+
+    prio (full variant only): [M] int32 per-server tie priority in
+    [0, M), lower wins after the class tie-break — pass a random
+    permutation for unbiased ties (the sequential path / refsim
+    semantics); None falls back to index order.
+
+    Returns (Q_new [M, 3] int32, W_new [M] f32, sel [B] int32,
+    sel_cls [B] int32, val [B] f32): the post-commit queues, the
+    post-commit workloads as routing saw them (W0 + the sequential
+    deltas), each arrival's chosen server + locality class, and its score
+    at decision time.  Arrival b's score already reflects commits
+    0..b-1 — see ref.route_commit_ref for the exact oracle.
+    """
+    M, three = Q.shape
+    assert three == 3
+    interp = resolve_interpret(interpret)
+    # Mosaic needs 128-lane tiles; the interpreter (CPU/CI) has no lane
+    # constraint, and at small M the 128-lane pad is ~3x wasted vector work
+    # per slot.  Padding never changes results (pad lanes are ineligible
+    # and the integer tie radix scales with Mp without reordering ranks).
+    lane = LANE if not interp else 8
+    Mp = max(8, -(-M // lane) * lane)
+    assert 4 * Mp * Mp < _BIG, f"M={M}: tie-rank lane overflows int32"
+    q_p = _pad_q(Q, Mp)
+    invm = jnp.pad(encode(inv_rates, M), ((0, Mp - M), (0, 0)))  # [Mp, 8]
+
+    if cls is not None:
+        assert cand_idx is None, "pass cls OR cand_idx, not both"
+        B = cls.shape[0]
+        Bp = max(8, -(-B // 8) * 8)
+        cls_p = jnp.pad(cls.astype(jnp.int32), ((0, Bp - B), (0, Mp - M)),
+                        constant_values=3)
+        mask_p = jnp.pad(valid.astype(jnp.int32), (0, Bp - B))[None, :]
+        prio_p = jnp.arange(Mp, dtype=jnp.int32)   # pad lanes keep < Mp
+        if prio is not None:
+            prio_p = prio_p.at[:M].set(prio.astype(jnp.int32))
+        kern = functools.partial(_kernel_full, m_pad=Mp, b_pad=Bp)
+        operands = (q_p, cls_p, mask_p, invm, prio_p[None, :])
+    else:
+        assert cand_idx is not None and cand_cls is not None \
+            and cand_valid is not None
+        assert prio is None, "prio is a full-variant operand (slot order " \
+            "is already random in a sampled candidate list)"
+        B, C = cand_idx.shape
+        Bp = max(8, -(-B // 8) * 8)
+        Cp = max(8, -(-C // 8) * 8)
+        pad2 = lambda x, fill: jnp.pad(x.astype(jnp.int32),
+                                       ((0, Bp - B), (0, Cp - C)),
+                                       constant_values=fill)
+        mask_p = jnp.pad(valid.astype(jnp.int32), (0, Bp - B))[None, :]
+        kern = functools.partial(_kernel_pod, m_pad=Mp, c_pad=Cp, b_pad=Bp,
+                                 homogeneous=inv_rates.ndim == 1)
+        operands = (q_p, pad2(cand_idx, 0), pad2(cand_cls, 3),
+                    pad2(cand_valid, 0), mask_p, invm)
+
+    q_new, w, sel, scls, val = pl.pallas_call(
+        kern,
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, 8), jnp.int32),
+            jax.ShapeDtypeStruct((Mp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, Bp), jnp.int32),
+            jax.ShapeDtypeStruct((1, Bp), jnp.int32),
+            jax.ShapeDtypeStruct((1, Bp), jnp.float32),
+        ],
+        interpret=interp,
+    )(*operands)
+    return (q_new[:M, :3], w[:M, 0], sel[0, :B], scls[0, :B], val[0, :B])

@@ -28,13 +28,15 @@ guard, so a zero-workload dead server scores ``+inf`` rather than
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .invrates import FLAG_BASE, WIDTH, encode
+from .invrates import FLAG_BASE, WIDTH, encode, resolve_interpret
 
 LANE = 128
 SUB = 8
@@ -74,7 +76,8 @@ def _kernel(w_ref, cls_ref, invr_ref, val_ref, idx_ref, *, m_tile: int):
 @functools.partial(jax.jit, static_argnames=("b_tile", "m_tile", "interpret"))
 def weighted_argmin(W: jnp.ndarray, cls: jnp.ndarray, inv_rates: jnp.ndarray,
                     *, b_tile: int = SUB, m_tile: int = 4 * LANE,
-                    interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+                    interpret: Optional[bool] = None
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """See ref.weighted_argmin_ref.  W: [M]; cls: [B, M] int32;
     inv_rates: [3] homogeneous or [M, 3] per-server (entries may be +inf
     for zero-rate servers — masked to +inf scores, never NaN).
@@ -108,6 +111,6 @@ def weighted_argmin(W: jnp.ndarray, cls: jnp.ndarray, inv_rates: jnp.ndarray,
             jax.ShapeDtypeStruct((Bp,), jnp.float32),
             jax.ShapeDtypeStruct((Bp,), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(W_p, cls_p, invr)
     return idx[:B], val[:B]

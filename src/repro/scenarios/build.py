@@ -87,17 +87,20 @@ def canonical_a_max(cluster: "Cluster", rates: "Rates", cfg, load: float,
     ``a_max`` is a static jit argument of the simulator, so a per-scenario
     value (peak intensity x scenario capacity) would force one recompile per
     scenario even with canonical array padding.  This resolves the maximum
-    over the registry (or an explicit subset); cfg is any object with ``T``
-    and ``resolve_a_max`` (i.e. a core.SimConfig — duck-typed to avoid an
-    import cycle).
+    over the registry (or an explicit subset), sizing each scenario's
+    buffer from its PEAK slot intensity (mean rate x max of the mean-1
+    intensity shape — flash/diurnal shapes spike well above the mean); cfg
+    is any object with ``T`` and ``resolve_a_max(lam, shape_peak)`` (i.e.
+    a core.SimConfig — duck-typed to avoid an import cycle).
     """
     specs = tuple(scenarios) if scenarios is not None else tuple(
         SCENARIOS.values())
     a_max = 1
     for s in specs:
         scen, lam_cap = realize(get_scenario(s), cluster, rates, cfg.T)
-        peak = float(load) * lam_cap * float(np.max(np.asarray(scen.lam_shape)))
-        a_max = max(a_max, cfg.resolve_a_max(peak))
+        shape_peak = float(np.max(np.asarray(scen.lam_shape)))
+        a_max = max(a_max, cfg.resolve_a_max(float(load) * lam_cap,
+                                             shape_peak))
     return a_max
 
 

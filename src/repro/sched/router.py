@@ -4,12 +4,18 @@ router, backed by the Pallas kernels.
 The router keeps the paper's per-replica 3-sub-queue bookkeeping (Q[m, c]
 counts of requests queued at replica m in locality class c) and its
 workload metric W_m = Q^l/alpha + Q^k/beta + Q^r/gamma, and routes each
-request batch with one kernel call:
+request batch with ONE fused kernels.route_commit launch — score, route,
+and queue-commit with in-kernel sequential conflict resolution, so request
+b+1 in a batch scores against workloads that already include request b's
+commit (no snapshot herding under bursts):
 
-  policy="pod"  -> kernels.pod_route     (O(d) probes per request — paper §IV-C)
-  policy="full" -> kernels.weighted_argmin (O(M) baseline Balanced-Pandas)
+  policy="pod"  -> route_commit pod variant  (O(d) probes per request —
+                   paper §IV-C candidate lists)
+  policy="full" -> route_commit full variant (O(M) baseline Balanced-Pandas)
 
-followed by kernels.queue_update (fused scatter + workload refresh).  The
+The kernel also updates Q and W in the same launch (the old three-call
+pod_route/weighted_argmin + queue_update sequence is gone), and breaks
+exact score ties by locality class then index — no epsilon lifts.  The
 complexity counter the benchmarks report (probes per decision) is exactly
 the candidate-set width handed to the kernel.
 
@@ -36,7 +42,7 @@ import numpy as np
 
 from ..core.cluster import LOCAL, RACK, REMOTE, Rates
 from ..core.policies import PodSpec
-from ..kernels import pod_route, queue_update, weighted_argmin
+from ..kernels import route_commit
 from .locality import FleetTopology
 
 
@@ -135,25 +141,29 @@ class PodRouter:
 
     def route(self, locals_: np.ndarray) -> np.ndarray:
         """Route a batch of requests; locals_: [B, r] replica ids holding
-        each request's prefix.  Returns chosen replica ids [B]."""
+        each request's prefix.  Returns chosen replica ids [B].
+
+        One fused route_commit launch per batch: request b+1 scores
+        against workloads including request b's commit, and Q/W come back
+        updated from the same kernel."""
         B = locals_.shape[0]
         cls = self._classes(locals_)
         inv = self._inv
+        valid_b = jnp.ones((B,), bool)
         if self.policy == "full":
-            sel, _ = weighted_argmin(self.W, jnp.asarray(cls), inv)
-            sel_cls = jnp.asarray(cls)[jnp.arange(B), sel]
+            # random tie priority per batch: W is lattice-valued, exact
+            # ties are routine, and index-order ties hotspot low replicas
+            self.Q, self.W, sel, sel_cls, _ = route_commit(
+                self.Q, valid_b, inv, cls=jnp.asarray(cls),
+                prio=jax.random.permutation(self._next_key(), self.M))
             self.stats.probes += B * self.M
         else:
             idx, ccls, valid = self._sample_candidates(cls, locals_)
-            sel, _ = pod_route(self.W, jnp.asarray(idx), jnp.asarray(ccls),
-                               jnp.asarray(valid), inv)
-            take = (jnp.asarray(idx) == sel[:, None]).argmax(axis=1)
-            sel_cls = jnp.take_along_axis(jnp.asarray(ccls), take[:, None],
-                                          axis=1)[:, 0]
+            self.Q, self.W, sel, sel_cls, _ = route_commit(
+                self.Q, valid_b, inv, cand_idx=jnp.asarray(idx),
+                cand_cls=jnp.asarray(ccls), cand_valid=jnp.asarray(valid))
             self.stats.probes += B * idx.shape[1]
         self.stats.decisions += B
-        valid_b = jnp.ones((B,), bool)
-        self.Q, self.W = queue_update(self.Q, sel, sel_cls, valid_b, inv)
         np.add.at(self.stats.routed_by_class, np.asarray(sel_cls), 1)
         return np.asarray(sel)
 

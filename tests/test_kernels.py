@@ -14,7 +14,8 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.kernels import pod_route, queue_update, ref, weighted_argmin
+from repro.kernels import (pod_route, queue_update, ref, route_commit,
+                           weighted_argmin)
 
 SHAPES = [(64, 3, 5), (128, 8, 8), (500, 37, 11), (1000, 130, 19), (129, 9, 16)]
 INV = jnp.array([25.0, 50.0, 125.0], jnp.float32)
@@ -213,6 +214,215 @@ def test_hetero_zero_rate_never_selected_over_live_candidate():
                                jnp.asarray(inv_m))
     assert not np.isin(np.asarray(sel), dead).any()
     assert np.isfinite(np.asarray(val)).all()
+
+
+# ---------------------------------------------------------------------------
+# Fused route_commit megakernel: in-kernel sequential-commit semantics vs an
+# independent numpy oracle (python loop), the class tie-break lane at large
+# workload offsets, and the anti-herding burst contract.
+# ---------------------------------------------------------------------------
+
+
+def _np_route_commit(Q, valid, inv_m, cls=None, ci=None, cc=None, cv=None,
+                     prio=None):
+    """Independent numpy sequential-commit oracle: a python loop over
+    arrivals.  Arrival b scores against W0 + dW (dW = f32-accumulated
+    commits of arrivals 0..b-1, +finite inv_rate each); exact ties break by
+    locality class, then the full variant's optional ``prio`` lane, then
+    server index (full) / candidate slot (pod, with invalid slots losing
+    every tie); dead (+inf) entries mask to +inf after the multiply and
+    commit 0 workload."""
+    M = Q.shape[0]
+    inv_f = np.where(np.isfinite(inv_m), inv_m, 0.0).astype(np.float32)
+    dead = ~np.isfinite(inv_m)
+    W0 = (Q.astype(np.float32) * inv_f).sum(-1).astype(np.float32)
+    dw = np.zeros(M, np.float32)
+    Qn = Q.copy()
+    B = valid.shape[0]
+    sel = np.zeros(B, np.int32)
+    scls = np.zeros(B, np.int32)
+    val = np.zeros(B, np.float32)
+    m = np.arange(M)
+    p = m if prio is None else np.asarray(prio)
+    for b in range(B):
+        if cls is not None:
+            factor = inv_f[m, cls[b]]
+            ok = ~dead[m, cls[b]]
+            scores = np.full(M, np.inf, np.float32)
+            scores[ok] = ((W0 + dw) * factor)[ok]
+            rank = np.where(scores == scores.min(),
+                            (cls[b] * M + p) * M + m, 2**30)
+            rb = rank.min()
+            s, c = rb % M, rb // (M * M)
+            amt = inv_f[s, cls[b, s]]
+        else:
+            C = ci.shape[1]
+            slot = np.arange(C)
+            factor = inv_f[ci[b], cc[b]]
+            ok = cv[b] & ~dead[ci[b], cc[b]]
+            scores = np.full(C, np.inf, np.float32)
+            scores[ok] = ((W0 + dw)[ci[b]] * factor)[ok]
+            rank = np.where(scores == scores.min(),
+                            cc[b] * C + slot + (~cv[b]) * 4 * C, 2**30)
+            sl = rank.min() % C
+            s, c = ci[b, sl], cc[b, sl]
+            amt = factor[sl]
+        sel[b], scls[b], val[b] = s, c, scores.min()
+        if valid[b]:
+            dw[s] = np.float32(dw[s] + amt)
+            Qn[s, c] += 1
+    return Qn, W0 + dw, sel, scls, val
+
+
+def _assert_route_commit_equal(out_k, out_np):
+    qk, wk, sk, ck, vk = (np.asarray(x) for x in out_k)
+    qn, wn, sn, cn, vn = out_np
+    np.testing.assert_array_equal(sk, sn)
+    np.testing.assert_array_equal(ck, cn)
+    np.testing.assert_array_equal(qk, qn)
+    np.testing.assert_allclose(wk, wn, rtol=1e-6)
+    np.testing.assert_allclose(vk, vn, rtol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_route_commit_full_hetero_property(seed):
+    rng, M, B, C, inv_m, _W_j, _W32 = _hetero_case(seed)
+    Q = rng.integers(0, 30, (M, 3)).astype(np.int32)
+    cls = rng.integers(0, 3, (B, M)).astype(np.int32)
+    valid = rng.random(B) < 0.85
+    prio = (rng.permutation(M).astype(np.int32)
+            if rng.random() < 0.5 else None)
+    out = route_commit(jnp.asarray(Q), jnp.asarray(valid), jnp.asarray(inv_m),
+                       cls=jnp.asarray(cls),
+                       prio=None if prio is None else jnp.asarray(prio))
+    _assert_route_commit_equal(
+        out, _np_route_commit(Q, valid, inv_m, cls=cls, prio=prio))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_route_commit_pod_hetero_property(seed):
+    rng, M, B, C, inv_m, _W_j, _W32 = _hetero_case(seed)
+    Q = rng.integers(0, 30, (M, 3)).astype(np.int32)
+    ci = rng.integers(0, M, (B, C)).astype(np.int32)
+    if rng.random() < 0.5:           # duplicate candidates: exact slot ties
+        ci[:, 1::2] = ci[:, 0::2][:, :ci[:, 1::2].shape[1]]
+    cc = rng.integers(0, 3, (B, C)).astype(np.int32)
+    cv = rng.random((B, C)) < 0.85
+    cv[:, 0] = True
+    valid = rng.random(B) < 0.85
+    out = route_commit(jnp.asarray(Q), jnp.asarray(valid), jnp.asarray(inv_m),
+                       cand_idx=jnp.asarray(ci), cand_cls=jnp.asarray(cc),
+                       cand_valid=jnp.asarray(cv))
+    _assert_route_commit_equal(
+        out, _np_route_commit(Q, valid, inv_m, ci=ci, cc=cc, cv=cv))
+
+
+@pytest.mark.parametrize("M,B,C", SHAPES)
+def test_route_commit_matches_jnp_ref(M, B, C):
+    """Both variants agree with ref.route_commit_ref (the jnp oracle the
+    simulator's telemetry replay shares) across the full shape pool."""
+    rng = np.random.default_rng(M * 13 + B)
+    inv_m = rng.uniform(1e-2, 1e2, (M, 3)).astype(np.float32)
+    inv_m[:: max(M // 7, 1)] = np.inf
+    Q = jnp.asarray(rng.integers(0, 40, (M, 3)), jnp.int32)
+    valid = jnp.asarray(rng.random(B) < 0.9)
+    inv = jnp.asarray(inv_m)
+
+    cls = jnp.asarray(rng.integers(0, 3, (B, M)), jnp.int32)
+    prio = jnp.asarray(rng.permutation(M), jnp.int32)
+    out_k = route_commit(Q, valid, inv, cls=cls, prio=prio)
+    out_r = ref.route_commit_ref(Q, valid, inv, cls=cls, prio=prio)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+    ci = jnp.asarray(rng.integers(0, M, (B, C)), jnp.int32)
+    cc = jnp.asarray(rng.integers(0, 3, (B, C)), jnp.int32)
+    cv = jnp.asarray(rng.random((B, C)) < 0.85, jnp.int32)
+    out_k = route_commit(Q, valid, inv, cand_idx=ci, cand_cls=cc,
+                         cand_valid=cv)
+    out_r = ref.route_commit_ref(Q, valid, inv, cand_idx=ci, cand_cls=cc,
+                                 cand_valid=cv)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@pytest.mark.parametrize("offset", [0, 333])
+def test_route_commit_class_tiebreak_survives_large_workload(offset):
+    """Regression for the deleted _BP_TIE_EPS lift: with every sub-queue at
+    ``offset`` and unit rates, every score ties EXACTLY at W = 3*offset
+    (999 at offset=333 — where the old host-side ``W + 1e-6`` lift was
+    silently absorbed by f32 addition, ulp(999) ~ 6e-5, so ties fell back
+    to lowest server index).  The in-kernel integer rank lane must still
+    route every arrival to its LOCAL server, never server 0."""
+    M, B = 64, 8
+    Q = np.full((M, 3), offset, np.int32)
+    inv = jnp.ones(3, jnp.float32)
+    rng = np.random.default_rng(5)
+    local_at = rng.choice(np.arange(1, M), size=B, replace=False)  # never 0
+    cls = np.full((B, M), 2, np.int32)
+    cls[np.arange(B), local_at] = 0
+    _, _, sel, scls, _ = route_commit(jnp.asarray(Q), jnp.ones(B, bool), inv,
+                                      cls=jnp.asarray(cls))
+    np.testing.assert_array_equal(np.asarray(sel), local_at)
+    assert (np.asarray(scls) == 0).all()
+
+    # pod variant: local candidate deliberately NOT in slot 0
+    C = 5
+    ci = np.stack([rng.choice(M, size=C, replace=False) for _ in range(B)])
+    cc = np.tile(np.array([2, 1, 0, 1, 2], np.int32), (B, 1))
+    out = route_commit(jnp.asarray(Q), jnp.ones(B, bool), inv,
+                       cand_idx=jnp.asarray(ci), cand_cls=jnp.asarray(cc),
+                       cand_valid=jnp.ones((B, C), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out[2]), ci[:, 2])
+    assert (np.asarray(out[3]) == 0).all()
+
+
+def test_route_commit_burst_spreads_one_task_per_server():
+    """The anti-herding contract: a burst of B arrivals into an all-empty
+    equal-rate fleet lands one task per server (each arrival sees the
+    previous commits), where snapshot routing would have piled all B onto
+    the single argmin server."""
+    M, B = 64, 48
+    Q0 = jnp.zeros((M, 3), jnp.int32)
+    q, w, sel, _, _ = route_commit(Q0, jnp.ones(B, bool), jnp.ones(3),
+                                   cls=jnp.zeros((B, M), jnp.int32))
+    assert int(np.asarray(q).max()) == 1
+    assert len(np.unique(np.asarray(sel))) == B
+
+    # pod variant with every server a candidate: same spread
+    ci = jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32)[None, :], (B, M))
+    q, _, sel, _, _ = route_commit(Q0, jnp.ones(B, bool), jnp.ones(3),
+                                   cand_idx=ci,
+                                   cand_cls=jnp.zeros((B, M), jnp.int32),
+                                   cand_valid=jnp.ones((B, M), jnp.int32))
+    assert int(np.asarray(q).max()) == 1
+    assert len(np.unique(np.asarray(sel))) == B
+
+
+def test_route_commit_wseq_replays_decision_workloads():
+    """ref.route_commit_wseq row b == the pre-commit workload arrival b
+    scored against (the telemetry probe replay contract): row 0 is W0, and
+    re-scoring each arrival against its replayed row reproduces the
+    kernel's chosen score."""
+    rng = np.random.default_rng(9)
+    M, B = 96, 17
+    Q = jnp.asarray(rng.integers(0, 20, (M, 3)), jnp.int32)
+    inv_m = rng.uniform(0.1, 10.0, (M, 3)).astype(np.float32)
+    inv_m[5] = np.inf
+    inv = jnp.asarray(inv_m)
+    cls = jnp.asarray(rng.integers(0, 3, (B, M)), jnp.int32)
+    valid = jnp.asarray(rng.random(B) < 0.8)
+    _, W_new, sel, scls, val = route_commit(Q, valid, inv, cls=cls)
+    wseq = np.asarray(ref.route_commit_wseq(Q, sel, scls, valid, inv))
+    inv_f = np.where(np.isfinite(inv_m), inv_m, 0.0)
+    np.testing.assert_allclose(
+        wseq[0], (np.asarray(Q) * inv_f).sum(-1), rtol=1e-6)
+    clsn, seln = np.asarray(cls), np.asarray(sel)
+    replayed = wseq[np.arange(B), seln] * inv_f[
+        seln, clsn[np.arange(B), seln]]
+    np.testing.assert_allclose(replayed, np.asarray(val), rtol=1e-6)
 
 
 def test_kernels_compose_as_router_pipeline():

@@ -2,6 +2,8 @@
 refsim-vs-JAX agreement on a heterogeneous fleet, canonical padding
 (one-compile sweep guard), and PodRouter-vs-refsim end-to-end agreement
 on the heterogeneous kernel path."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -679,9 +681,9 @@ def test_refsim_and_jax_agree_on_per_class_windows():
 
 
 def test_batched_kernel_path_agrees_with_sequential_on_hetero():
-    """The route_mode="batched" BP path now calls pod_route /
-    weighted_argmin directly; on a slow-rack fleet it must agree with the
-    sequential plain-JAX path at the same tolerance the homogeneous
+    """The route_mode="batched" BP path runs the fused route_commit
+    megakernel; on a slow-rack fleet it must agree with the sequential
+    plain-JAX path at the same tolerance the homogeneous
     batched-vs-sequential test uses."""
     cfg_s = SimConfig(T=6_000, warmup=1_500)
     cfg_b = SimConfig(T=6_000, warmup=1_500, route_mode="batched")
@@ -691,3 +693,73 @@ def test_batched_kernel_path_agrees_with_sequential_on_hetero():
         b = float(simulate(algo, CLUSTER, RATES, 0.6, jax.random.PRNGKey(3),
                            cfg_b, scenario="slow_rack").mean_completion_slots)
         assert abs(a - b) / a < 0.25, (algo, a, b)
+
+
+def test_batched_fused_path_agrees_with_sequential_under_flash():
+    """The snapshot-herding regression, end to end: flash_crowd drives
+    large multi-arrival slots (2.5x peak), exactly where the old batched
+    path routed a whole burst against one workload snapshot and herded it
+    onto the argmin server (inflating completion times far beyond the
+    sequential path).  With in-kernel sequential commits the batched and
+    sequential paths must agree for every batched algorithm — BP, BP-Pod,
+    and JSQ-MW-Pod.  clip_fraction == 0 also locks the peak-aware
+    resolve_a_max sizing: the flash peak must fit the arrival buffer."""
+    cfg_s = SimConfig(T=6_000, warmup=1_500)
+    cfg_b = SimConfig(T=6_000, warmup=1_500, route_mode="batched")
+    for algo in ("balanced_pandas", "balanced_pandas_pod",
+                 "jsq_maxweight_pod"):
+        rs = simulate(algo, CLUSTER, RATES, 0.6, jax.random.PRNGKey(5),
+                      cfg_s, scenario="flash_crowd")
+        rb = simulate(algo, CLUSTER, RATES, 0.6, jax.random.PRNGKey(5),
+                      cfg_b, scenario="flash_crowd")
+        assert float(rs.clip_fraction) == 0.0, algo
+        assert float(rb.clip_fraction) == 0.0, algo
+        a = float(rs.mean_completion_slots)
+        b = float(rb.mean_completion_slots)
+        assert abs(a - b) / a < 0.25, (algo, a, b)
+
+
+def test_batched_fused_path_agrees_with_refsim():
+    """Acceptance criterion: the fused batched path vs the event-accurate
+    numpy refsim oracle, which routes every arrival against queues that
+    include all earlier arrivals in the slot — the semantics the megakernel
+    now implements in-kernel.  At load 0.5 multi-arrival slots are routine,
+    so snapshot herding would push N well past the 5% bar."""
+    T, warmup, load = 12_000, 3_000, 0.5
+    ref = np.mean([simulate_bp_ref(CLUSTER, RATES, load, T=T, warmup=warmup,
+                                   seed=s).mean_tasks_in_system
+                   for s in range(3)])
+    cfg = SimConfig(T=T, warmup=warmup, route_mode="batched")
+    jaxN = np.mean([float(simulate("balanced_pandas", CLUSTER, RATES, load,
+                                   jax.random.PRNGKey(s),
+                                   cfg).mean_tasks_in_system)
+                    for s in range(6)])
+    assert abs(jaxN - ref) / ref < 0.05, (jaxN, ref)
+
+
+# ---------------------------------------------------------------------------
+# peak-aware arrival-buffer sizing
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_a_max_sizes_from_peak_intensity():
+    """resolve_a_max bounds the Poisson tail at the PEAK slot intensity
+    (lam * shape_peak), not the mean — sizing from the mean clipped
+    arrivals in exactly the flash/diurnal scenarios the clip warnings
+    exist for."""
+    cfg = SimConfig(T=100, warmup=10)
+    assert cfg.resolve_a_max(10.0, 5.0) == cfg.resolve_a_max(50.0)
+    assert cfg.resolve_a_max(10.0, 5.0) > cfg.resolve_a_max(10.0)
+    assert cfg.resolve_a_max(10.0, 1.0) == cfg.resolve_a_max(10.0)
+    # explicit a_max still overrides the auto sizing
+    assert dataclasses.replace(cfg, a_max=7).resolve_a_max(10.0, 5.0) == 7
+    # the shared canonical width covers every registry scenario's peak:
+    # at least as wide as the peakiest shape demands
+    cluster = Cluster(M=16, K=4)
+    am = canonical_a_max(cluster, RATES, cfg, 0.5)
+    lam_cap = 0.5 * RATES.alpha * cluster.M
+    peaks = []
+    for spec in SCENARIOS.values():
+        scen, _ = realize(spec, cluster, RATES, cfg.T)
+        peaks.append(float(np.max(np.asarray(scen.lam_shape))))
+    assert am >= cfg.resolve_a_max(lam_cap, max(peaks))

@@ -8,17 +8,22 @@ from repro.core.ballsbins import max_load, theory_d
 from repro.sched import FleetTopology, PodRouter, ShardBalancer, service_rates
 
 
-def test_router_prefers_low_workload_locals():
+def test_router_sequential_commit_spreads_batch():
     fleet = FleetTopology(n_replicas=32, n_pods=4)
     router = PodRouter(fleet, service_rates(), policy="pod")
     homes = np.array([[0, 1, 2]] * 16)
     sel = router.route(homes)
-    # empty cluster: everything lands on the (local) home replicas
-    assert set(sel.tolist()) <= {0, 1, 2}
-    # now flood the homes and route again: spillover must be sampled
+    # empty cluster: the class tie-break sends the first requests to their
+    # (local) home replicas, in slot order
+    assert sel[:3].tolist() == [0, 1, 2]
+    # ...and in-batch sequential commits spread the rest of the burst: an
+    # empty sampled candidate (score 0) beats a just-loaded local, so the
+    # batch fans out instead of herding onto one snapshot argmin
+    assert np.bincount(sel, minlength=32).max() <= 2, sel
+    # flood the homes and route again: spillover must be sampled
     for _ in range(20):
         router.route(homes)
-    sel2 = router.route(homes)
+    router.route(homes)
     assert router.stats.decisions == 16 * 22
     assert router.stats.probes == 16 * 22 * (3 + 8)   # O(1): 11 probes
 
