@@ -23,6 +23,7 @@ import locality
 import roofline_table
 import router_bench
 import scenarios as scenarios_suite
+import trace_replay
 from common import preset_from_argv
 
 
@@ -44,6 +45,11 @@ def _headline(name, out):
             done = [r for r in out if isinstance(r, dict)
                     and "skipped" not in r]
             return f"{len(done)} cells"
+        if name == "trace_replay":
+            tp = out["throughput"]["trace_replay"]["tasks_per_s"]
+            return (f"replay {tp:.0f} routed tasks/s = "
+                    f"{out['speedup_vs_per_slot']:.1f}x per-slot path; "
+                    f"trace_count {out['trace_count']}")
         if name == "router_bench":
             tp = out["throughput"]["balanced_pandas_pod"]
             bp_f = out["probe_quality"]["balanced_pandas_pod"]["flatness"]
@@ -80,6 +86,7 @@ def main() -> None:
         ("fig7_fixedload_logn", fig7_fixedload_logn.main),
         ("locality", locality.main),
         ("scenarios", scenarios_suite.main),
+        ("trace_replay", trace_replay.main),
         ("router_bench", router_bench.main),
         ("complexity", complexity.main),
         ("balls_and_bins", balls_and_bins.main),

@@ -92,6 +92,9 @@ def _mean_T(preset: Preset, algo: str, scenario, pod=None,
         cfg = preset.cfg
         row["drift_windowed"] = windowed_drift(tele, tcfg, cfg.T, cfg.warmup)
         row["sojourn"] = sojourn_percentiles(tele, tcfg)
+        if "note" in row["sojourn"]:
+            print(f"[scenarios] NOTE {label}/{algo}: "
+                  f"{row['sojourn']['note']}")
         row["probe"] = probe_summary(tele)
         if sink is not None:
             sink.extend(to_events(tele, tcfg, cfg.T, cfg.warmup, run_manifest(

@@ -1,0 +1,107 @@
+"""Trace-replay throughput benchmark -> BENCH_router.json.
+
+Replays the canonical production-day trace through
+``repro.trace.replay.ReplayEngine`` (double-buffered host->device arrival
+chunks over the fused route_commit megakernel) and compares sustained
+routed-tasks/sec against the per-slot ``benchmarks/scenarios.py`` path:
+``simulate_grid`` on the same trace-lowered scenario, same cluster / cfg /
+load, timed warm.  The trace is sized to load 0.45 of the preset's
+placement-free capacity (the replay acceptance operating point).
+
+The datapoint is appended to ``BENCH_router.json`` under its own preset
+name (``trace-replay-<preset>``), so scripts/check_router_bench.py gates
+replay-vs-replay across commits — the first run of a new preset has
+nothing to gate against and passes.
+
+Usage: PYTHONPATH=src python benchmarks/trace_replay.py [--preset=smoke]
+                                                        [--require=3.0]
+``--require=R`` exits nonzero unless replay sustains at least R x the
+per-slot routed-tasks/sec (CI pins the acceptance ratio).
+"""
+import sys
+import time
+
+import numpy as np
+
+from common import preset_from_argv
+from router_bench import BENCH_PATH, _append_datapoint
+
+from repro.core import simulate_grid
+from repro.trace import production_day, scenario_from_trace
+from repro.trace.replay import ReplayEngine
+
+LOAD = 0.45
+
+
+def _per_slot_tasks_per_s(preset, scn, load) -> dict:
+    """Warm routed-tasks/sec of the scenarios.py path (simulate_grid on the
+    trace-lowered scenario, the preset's own route_mode)."""
+    args = ("balanced_pandas_pod", preset.cluster, preset.rates, [load],
+            1, preset.cfg)
+    res = simulate_grid(*args, scenario=scn)            # compile + warm
+    np.asarray(res.mean_tasks_in_system)                # block
+    t0 = time.perf_counter()
+    res = simulate_grid(*args, scenario=scn)
+    routed = float(np.asarray(res.route_decisions).sum())
+    np.asarray(res.mean_tasks_in_system)
+    wall = time.perf_counter() - t0
+    return {"wall_s": wall,
+            "route_mode": preset.cfg.route_mode,
+            "slots_per_s": preset.cfg.T / max(wall, 1e-9),
+            "tasks_per_s": routed / max(wall, 1e-9)}
+
+
+def main(preset=None):
+    p = preset or preset_from_argv()
+    lam_cap = p.cluster.M * p.rates.alpha    # placement-free capacity edge
+    n_tasks = int(round(LOAD * lam_cap * p.cfg.T))
+    log = production_day(n_tasks=n_tasks)
+
+    eng = ReplayEngine(log, p.cluster, p.rates, cfg=p.cfg)
+    cold = eng.run(seed=0)                   # pays the one compile
+    res = eng.run(seed=0)                    # timed warm run, zero compiles
+    replay = {"wall_s": res.wall_s,
+              "slots_per_s": p.cfg.T / max(res.wall_s, 1e-9),
+              "tasks_per_s": res.tasks_per_s}
+    print(f"[trace_replay] replay   {res.tasks_per_s:12.0f} tasks/s "
+          f"({res.routed_tasks} tasks, wall {res.wall_s:.3f}s, "
+          f"trace_count cold {cold.trace_count} / warm {res.trace_count})")
+    if (cold.trace_count, res.trace_count) != (1, 0):
+        raise SystemExit(
+            f"[trace_replay] FAIL: expected one compile for the whole "
+            f"replay (cold 1 / warm 0), saw cold {cold.trace_count} / "
+            f"warm {res.trace_count}")
+
+    scn = scenario_from_trace(log, seed=0)
+    base = _per_slot_tasks_per_s(p, scn, eng.load)
+    ratio = replay["tasks_per_s"] / max(base["tasks_per_s"], 1e-9)
+    print(f"[trace_replay] per-slot {base['tasks_per_s']:12.0f} tasks/s "
+          f"({base['route_mode']} route_mode, wall {base['wall_s']:.3f}s)")
+    print(f"[trace_replay] replay sustains {ratio:.1f}x the per-slot path")
+
+    point = {
+        "date": time.strftime("%Y-%m-%d"),
+        "preset": f"trace-replay-{p.name}",
+        "M": p.cluster.M, "K": p.cluster.K,
+        "T": p.cfg.T, "load": LOAD, "n_tasks": n_tasks,
+        "trace": log.name,
+        "trace_count": cold.trace_count,       # == 1: one compile per replay
+        "trace_count_warm": res.trace_count,   # == 0: warm runs never compile
+        "speedup_vs_per_slot": ratio,
+        "throughput": {"trace_replay": replay,
+                       "per_slot_baseline": base},
+    }
+    _append_datapoint(point)
+    print(f"[trace_replay] appended datapoint -> {BENCH_PATH}")
+
+    require = [float(a.split("=", 1)[1]) for a in sys.argv[1:]
+               if a.startswith("--require=")]
+    if require and ratio < require[0]:
+        raise SystemExit(
+            f"[trace_replay] FAIL: replay sustained only {ratio:.2f}x the "
+            f"per-slot path (required {require[0]:.2f}x)")
+    return point
+
+
+if __name__ == "__main__":
+    main()

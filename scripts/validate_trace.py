@@ -1,0 +1,47 @@
+"""Validate arrival-log trace files against the versioned schema.
+
+Checks each file (JSONL or packed-npz; repro.trace.format) with
+``validate_log`` and prints a per-file verdict plus summary stats
+(tasks, horizon, churn epochs, tenants).  CI's trace-replay-smoke leg
+runs this on every synthesized trace artifact before replaying it.
+
+Usage: PYTHONPATH=src python scripts/validate_trace.py TRACE [TRACE ...]
+Exit 0 when every file validates, 1 otherwise.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.trace import load as load_log            # noqa: E402
+from repro.trace import validate_log                # noqa: E402
+
+
+def check(path: str) -> bool:
+    try:
+        log = load_log(path)
+    except Exception as e:
+        print(f"[validate_trace] FAIL {path}: unreadable ({e})")
+        return False
+    errs = validate_log(log)
+    if errs:
+        for e in errs:
+            print(f"[validate_trace] FAIL {path}: {e}")
+        return False
+    tenants = ("none" if log.tenant is None
+               else str(int(log.tenant.max()) + 1))
+    print(f"[validate_trace] ok   {path}: {log.n_tasks} tasks, "
+          f"horizon {log.horizon:g}, {log.n_epochs} placement epoch(s), "
+          f"tenants {tenants}, schema {log.schema}")
+    return True
+
+
+def main(paths) -> int:
+    if not paths:
+        print(__doc__)
+        return 1
+    return 0 if all([check(p) for p in paths]) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

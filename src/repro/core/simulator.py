@@ -100,6 +100,7 @@ from ..kernels import route_commit as kernel_route_commit
 from ..telemetry import collectors as tlm
 from ..scenarios.build import (
     ScenarioData,
+    placement_epoch_at,
     realize,
     sample_locals_scenario,
     speed_at,
@@ -217,14 +218,15 @@ def _progress_service(busy, rem, speed, cls, homo: bool = False):
     return busy, rem, completed
 
 
-def _arrival_batch(key, cluster, scen, lam_t, a_max, need_cls: bool):
+def _arrival_batch(key, cluster, scen, lam_t, a_max, need_cls: bool, pe=0):
     """Poisson(lam_t) arrival count (clipped to a_max) + per-arrival
-    locality under the scenario's placement law."""
+    locality under the scenario's placement law (``pe`` = the slot's
+    churn-epoch index, see scenarios.placement_epoch_at)."""
     k_n, k_loc = jax.random.split(key)
     raw = jax.random.poisson(k_n, lam_t)
     n = jnp.minimum(raw, a_max)
     mask = jnp.arange(a_max) < n
-    locals_ = sample_locals_scenario(k_loc, cluster, scen, a_max)
+    locals_ = sample_locals_scenario(k_loc, cluster, scen, a_max, pe=pe)
     cls = locality_class(cluster, locals_) if need_cls else None
     return mask, locals_, cls, (raw - n).astype(jnp.float32)
 
@@ -260,6 +262,24 @@ def _acc(sums: RawSums, *, in_half2, N, arr, clipped, comp, starts, routed,
     )
 
 
+_SIZE_SALT = 7  # fold_in salt deriving the size-multiplier PRNG stream
+
+
+def _task_work(key, dur, scen) -> jnp.ndarray:
+    """Float32 work units for freshly started tasks: the sampled duration
+    times the scenario's per-task size multiplier, exp(size_mu +
+    size_sigma * z) — a mean-1 lognormal (realize sets mu = -sigma^2/2).
+    size_sigma == 0 (every non-trace scenario) is the exact identity:
+    the multiplier is exp(0.0) == 1.0 and the f32 product returns ``dur``
+    bit-for-bit.  The normal draw comes from a salted fold of the duration
+    key, so the legacy duration/arrival PRNG streams are untouched."""
+    work = dur.astype(jnp.float32)
+    if scen is None or scen.size_mu is None:
+        return work
+    z = jax.random.normal(jax.random.fold_in(key, _SIZE_SALT), work.shape)
+    return work * jnp.exp(scen.size_mu + scen.size_sigma * z)
+
+
 # ---------------------------------------------------------------------------
 # BP family: Balanced-Pandas and Balanced-Pandas-Pod
 # ---------------------------------------------------------------------------
@@ -293,7 +313,7 @@ def _bp_workload(Q: jnp.ndarray, inv_rates: jnp.ndarray) -> jnp.ndarray:
 
 
 def _bp_schedule(key, Q, busy, rem, cls, rates, service_dist, sigma,
-                 servable):
+                 servable, scen=None):
     """Idle servers start their own head-of-class *servable* task:
     local > rack > remote among classes whose tier is up.  Purely local
     information — no cross-server messages (paper §IV-A).
@@ -308,7 +328,7 @@ def _bp_schedule(key, Q, busy, rem, cls, rates, service_dist, sigma,
     Q = Q - (jax.nn.one_hot(pick, 3, dtype=jnp.int32) * start[:, None].astype(jnp.int32))
     dur = sample_durations(key, pick, rates, service_dist, sigma)
     busy = busy | start
-    rem = jnp.where(start, dur.astype(jnp.float32), rem)
+    rem = jnp.where(start, _task_work(key, dur, scen), rem)
     cls = jnp.where(start, pick, cls)
     starts_by_class = (jax.nn.one_hot(pick, 3, dtype=jnp.float32)
                        * start[:, None].astype(jnp.float32)).sum(axis=0)
@@ -412,14 +432,14 @@ def _bp_step(state: BPState, sums: RawSums, key, *, cluster, rates, cfg,
         tele = tlm.record_sojourns(tele, tcfg, t, cfg.warmup, completed)
     Q, busy, rem, cls_serv, starts, n_started, pick, start = _bp_schedule(
         k_sched, state.Q, busy, rem, state.cls, rates, cfg.service_dist,
-        cfg.sigma, servable=None if homo else speed > 0)
+        cfg.sigma, servable=None if homo else speed > 0, scen=scen)
     if tcfg is not None:
         m = jnp.arange(cluster.M, dtype=jnp.int32)
         tele = tlm.ring_pop(tele, tcfg, m * 3 + pick, start, m)
 
-    mask, locals_, cls_arr, clipped = _arrival_batch(k_arr, cluster, scen,
-                                                     lam_t, a_max,
-                                                     need_cls=True)
+    mask, locals_, cls_arr, clipped = _arrival_batch(
+        k_arr, cluster, scen, lam_t, a_max, need_cls=True,
+        pe=placement_epoch_at(scen, t))
     Q, sel, sel_cls, probe = _bp_route_batch(
         k_route, cluster, Q, cls_arr, locals_, mask, inv_rate_m, pod,
         sequential=(cfg.route_mode == "sequential"),
@@ -487,7 +507,7 @@ def _grant_conflicts(tgt, prio, has, Q, key, M):
 
 def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
                  pod: Optional[PodSpec], speed, homo: bool = False,
-                 tcfg=None):
+                 tcfg=None, scen=None):
     """Batched scheduling for the single-queue family (see module docstring).
 
     variant: "maxweight" (argmax of rate-weighted queue lengths — the serving
@@ -615,16 +635,16 @@ def _sq_schedule(key, cluster, Q, busy, rem, cls, rates, cfg, variant,
                           jnp.where(rack_of[rows] == rack_of[tgt],
                                     RACK, REMOTE)).astype(jnp.int32)
     dur = sample_durations(k_dur, start_cls, rates, cfg.service_dist, cfg.sigma)
+    work = _task_work(k_dur, dur, scen)
 
     if S == M:
         # rows == arange(M): the per-row scatters are identity placements
         busy = busy | granted
-        rem = jnp.where(granted, dur.astype(jnp.float32), rem)
+        rem = jnp.where(granted, work, rem)
         cls = jnp.where(granted, start_cls, cls)
     else:
         busy = busy.at[rows].set(busy[rows] | granted)
-        rem = rem.at[rows].set(jnp.where(granted, dur.astype(jnp.float32),
-                                         rem[rows]))
+        rem = rem.at[rows].set(jnp.where(granted, work, rem[rows]))
         cls = cls.at[rows].set(jnp.where(granted, start_cls, cls[rows]))
     starts = (jax.nn.one_hot(start_cls, 3, dtype=jnp.float32)
               * granted[:, None].astype(jnp.float32)).sum(axis=0)
@@ -643,13 +663,14 @@ def _sq_step(state: SQState, sums: RawSums, key, *, cluster, rates, cfg,
         tele = tlm.record_sojourns(tele, tcfg, t, cfg.warmup, completed)
     Q, busy, rem, cls_serv, starts, n_sched, rows, tgt, granted, probe = \
         _sq_schedule(k_sched, cluster, state.Q, busy, rem, state.cls, rates,
-                     cfg, variant, pod, speed, homo=homo, tcfg=tcfg)
+                     cfg, variant, pod, speed, homo=homo, tcfg=tcfg,
+                     scen=scen)
     if tcfg is not None:
         tele = tlm.ring_pop(tele, tcfg, tgt, granted, rows)
 
-    mask, locals_, _cls, clipped = _arrival_batch(k_arr, cluster, scen,
-                                                  lam_t, a_max,
-                                                  need_cls=False)
+    mask, locals_, _cls, clipped = _arrival_batch(
+        k_arr, cluster, scen, lam_t, a_max, need_cls=False,
+        pe=placement_epoch_at(scen, t))
     if cfg.route_mode == "sequential":
         def route_one(Qc, xs):
             loc, valid, kr = xs
@@ -732,7 +753,9 @@ def _fcfs_step(state: FCFSState, sums: RawSums, key, *, cluster, rates, cfg,
     # replica triple is iid (uniform or chunk-skewed) and independent of
     # everything else, so sampling it at dequeue time is distributionally
     # identical.
-    locals_g = sample_locals_scenario(k_loc, cluster, scen, G)  # [G, n_rep]
+    pe = placement_epoch_at(scen, t)
+    locals_g = sample_locals_scenario(k_loc, cluster, scen, G,
+                                      pe=pe)  # [G, n_rep]
     rack_of = cluster.rack_of
     is_local = (locals_g == rows[:, None]).any(axis=1)
     in_rack = (rack_of[locals_g] == rack_of[rows][:, None]).any(axis=1)
@@ -744,14 +767,14 @@ def _fcfs_step(state: FCFSState, sums: RawSums, key, *, cluster, rates, cfg,
     dur = sample_durations(k_dur, start_cls, rates, cfg.service_dist, cfg.sigma)
     C = state.C - grant.sum().astype(jnp.int32)
     busy = busy.at[rows].set(busy[rows] | grant)
-    rem = rem.at[rows].set(jnp.where(grant, dur.astype(jnp.float32),
+    rem = rem.at[rows].set(jnp.where(grant, _task_work(k_dur, dur, scen),
                                      rem[rows]))
     cls = state.cls.at[rows].set(jnp.where(grant, start_cls, state.cls[rows]))
     starts = (jax.nn.one_hot(start_cls, 3, dtype=jnp.float32)
               * grant[:, None].astype(jnp.float32)).sum(axis=0)
 
     mask, _, _, clipped = _arrival_batch(k_arr, cluster, scen, lam_t, a_max,
-                                         need_cls=False)
+                                         need_cls=False, pe=pe)
     C = C + mask.sum().astype(jnp.int32)
 
     N = C.astype(jnp.float32) + busy.sum().astype(jnp.float32)

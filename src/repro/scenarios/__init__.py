@@ -79,6 +79,7 @@ from .spec import (
     FleetSpec,
     PlacementSpec,
     Scenario,
+    SizeSpec,
     TrafficProduct,
     TrafficSpec,
     WindowSpec,
@@ -96,11 +97,17 @@ from .build import (
     canonical_a_max,
     canonical_pad,
     capacity_scale,
+    placement_epoch_at,
     realize,
     sample_locals_scenario,
     speed_at,
     speed_trace,
     traffic_shape,
 )
+
+# trace-backed registry entries (production_day) register on import; the
+# trace package only pulls spec/build (already initialized above) at import
+# time — its replay layer, which needs the simulator, loads lazily
+from .. import trace as _trace  # noqa: E402,F401
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -35,6 +35,12 @@ class ScenarioData(NamedTuple):
                   ToR cascades) scale the beta/gamma columns independently.
     chunk_logits  [C]  log chunk popularity, or None for uniform placement
     chunk_locals  [C, n_replicas] each chunk's replica triple, or None
+    size_mu       scalar lognormal log-mean of the per-task service-size
+                  multiplier (None on directly-constructed pytrees; realize
+                  always emits it, with mu = -sigma^2/2 so the multiplier
+                  has mean exactly 1 and lam_cap is size-law invariant)
+    size_sigma    scalar lognormal log-std; 0.0 (the registry default)
+                  leaves sampled durations untouched bit-for-bit
     placement_on  scalar 0/1 selector, or None.  Canonical (padded)
                   realizations always carry the chunk arrays and choose the
                   placement law by DATA instead of pytree structure:
@@ -42,6 +48,15 @@ class ScenarioData(NamedTuple):
                   sample_locals.  That keeps every scenario on one compiled
                   signature (the one-compile sweep).  None preserves the
                   unpadded behavior, where structure picks the law.
+    epoch_logits  [P, C] per-churn-epoch chunk popularity (trace-lowered
+                  placements: row e is the CONDITIONAL popularity while
+                  epoch e is active, so per-instant skew is not diluted by
+                  mixing epochs), or None (single-epoch placements; the
+                  global ``chunk_logits`` law applies at every slot).
+                  Canonical realizations always carry it — row 0 mirrors
+                  chunk_logits, pad rows get ~ -inf.
+    placement_epoch  [T] int32 slot -> churn-epoch index into epoch_logits
+                  (zeros for single-epoch placements), or None.
     """
 
     lam_shape: jnp.ndarray
@@ -52,6 +67,10 @@ class ScenarioData(NamedTuple):
     chunk_logits: Optional[jnp.ndarray]
     chunk_locals: Optional[jnp.ndarray]
     placement_on: Optional[jnp.ndarray] = None
+    size_mu: Optional[jnp.ndarray] = None
+    size_sigma: Optional[jnp.ndarray] = None
+    epoch_logits: Optional[jnp.ndarray] = None
+    placement_epoch: Optional[jnp.ndarray] = None
 
     @property
     def M(self) -> int:
@@ -71,13 +90,15 @@ class ScenarioPad(NamedTuple):
 
     n_windows: int
     n_chunks: int
+    n_epochs: int = 1
 
 
 def canonical_pad(cluster: "Cluster", scenarios=None) -> ScenarioPad:
     """The registry-wide ScenarioPad (or for an explicit scenario subset)."""
-    n_windows, chunks_per_server = registry_limits(scenarios)
+    n_windows, chunks_per_server, n_epochs = registry_limits(scenarios)
     return ScenarioPad(n_windows=max(n_windows, 1),
-                       n_chunks=max(chunks_per_server * cluster.M, 1))
+                       n_chunks=max(chunks_per_server * cluster.M, 1),
+                       n_epochs=max(n_epochs, 1))
 
 
 def canonical_a_max(cluster: "Cluster", rates: "Rates", cfg, load: float,
@@ -208,6 +229,11 @@ def capacity_scale(scen: ScenarioData, T: int) -> float:
 def _shape_one(spec: TrafficSpec, T: int,
                rng: np.random.Generator) -> np.ndarray:
     """[T] float64 raw intensity shape of a single factor, clamped >= 0."""
+    if hasattr(spec, "realize_shape"):
+        # duck-typed extension hook: trace-backed traffic (repro.trace)
+        # bins recorded arrival timestamps instead of evaluating a formula
+        return np.maximum(
+            np.asarray(spec.realize_shape(T, rng), np.float64), 0.0)
     t = np.arange(T, dtype=np.float64)
     if spec.kind == "stationary":
         shape = np.ones(T)
@@ -269,8 +295,16 @@ def arrival_counts(spec, T: int, mean_per_tick: float,
 
 def _placement_arrays(spec: PlacementSpec, cluster: "Cluster",
                       rng: np.random.Generator):
+    """(chunk_logits [C], chunk_locals [C, n_rep], epoch_logits [P, C]) —
+    the last is None for single-epoch placements."""
+    if hasattr(spec, "realize_catalog"):
+        # duck-typed extension hook: trace-backed placement (repro.trace)
+        # derives the catalog from observed chunk ids + churn episodes
+        logits, locals_, epoch_logits = spec.realize_catalog(cluster, rng)
+        return (jnp.asarray(logits), jnp.asarray(locals_),
+                None if epoch_logits is None else jnp.asarray(epoch_logits))
     if spec.kind == "uniform":
-        return None, None
+        return None, None, None
     if spec.kind != "zipf":
         raise ValueError(f"unknown placement kind {spec.kind!r}")
     C = spec.chunks_per_server * cluster.M
@@ -280,15 +314,42 @@ def _placement_arrays(spec: PlacementSpec, cluster: "Cluster",
     # the *popularity* is skewed, not the placement itself (HDFS-style)
     order = np.argsort(rng.random((C, cluster.M)), axis=1)
     locals_ = order[:, :cluster.n_replicas].astype(np.int32)
-    return jnp.asarray(logits), jnp.asarray(locals_)
+    if spec.hot_rack is not None:
+        # adversarial placement: the hot head of the catalog (Zipf rows are
+        # already popularity-ordered) lives entirely inside one rack
+        R = cluster.rack_size
+        if not 0 <= spec.hot_rack < cluster.K:
+            raise ValueError(f"hot_rack {spec.hot_rack} out of range for "
+                             f"K={cluster.K} racks")
+        if R < cluster.n_replicas:
+            raise ValueError(f"rack_size {R} cannot host "
+                             f"{cluster.n_replicas} distinct replicas")
+        n_hot = max(1, min(C, math.ceil(spec.hot_frac * C)))
+        members = spec.hot_rack * R + np.arange(R)
+        horder = np.argsort(rng.random((n_hot, R)), axis=1)
+        locals_[:n_hot] = members[
+            horder[:, :cluster.n_replicas]].astype(np.int32)
+    return jnp.asarray(logits), jnp.asarray(locals_), None
+
+
+def placement_epoch_at(scen: Optional[ScenarioData], t):
+    """Scalar churn-epoch index at slot ``t`` (jit-safe; 0 when the
+    scenario has no time-varying placement)."""
+    if scen is None or scen.placement_epoch is None:
+        return 0
+    return scen.placement_epoch[t]
 
 
 def sample_locals_scenario(key: jax.Array, cluster: "Cluster",
-                           scen: ScenarioData, batch: int) -> jnp.ndarray:
+                           scen: ScenarioData, batch: int,
+                           pe=0) -> jnp.ndarray:
     """Replica triples for ``batch`` tasks under the scenario's placement.
 
     Uniform placement defers to core.cluster.sample_locals; Zipf placement
     draws a chunk from the popularity law and returns its fixed triple.
+    ``pe`` (scalar, may be traced — see placement_epoch_at) selects the
+    active churn epoch's conditional popularity row when the scenario
+    carries ``epoch_logits``; single-epoch placements use the global law.
     Canonical (padded) realizations carry ``placement_on`` and select
     between the two laws by data — both draws are computed and a scalar
     jnp.where picks one, so uniform and skewed scenarios share one trace."""
@@ -296,11 +357,13 @@ def sample_locals_scenario(key: jax.Array, cluster: "Cluster",
 
     if scen.chunk_locals is None:
         return sample_locals(key, cluster, batch)
+    logits = (scen.epoch_logits[pe] if scen.epoch_logits is not None
+              else scen.chunk_logits)
     if scen.placement_on is None:
-        cidx = jax.random.categorical(key, scen.chunk_logits, shape=(batch,))
+        cidx = jax.random.categorical(key, logits, shape=(batch,))
         return scen.chunk_locals[cidx]
     k_cat, k_uni = jax.random.split(key)
-    cidx = jax.random.categorical(k_cat, scen.chunk_logits, shape=(batch,))
+    cidx = jax.random.categorical(k_cat, logits, shape=(batch,))
     skewed = scen.chunk_locals[cidx]
     uniform = sample_locals(k_uni, cluster, batch)
     return jnp.where(scen.placement_on > 0, skewed, uniform)
@@ -315,13 +378,18 @@ _PAD_LOGIT = -1e30  # effectively -inf popularity: pad chunks are never drawn
 #                     (finite so categorical's gumbel arithmetic stays NaN-free)
 
 
-def _pad_placement(chunk_logits, chunk_locals, cluster: "Cluster",
-                   n_chunks: int):
-    """Canonicalize the placement axis to ``n_chunks`` catalog rows.
+def _pad_placement(chunk_logits, chunk_locals, epoch_logits,
+                   cluster: "Cluster", n_chunks: int, n_epochs: int):
+    """Canonicalize the placement axis to ``n_chunks`` catalog rows and
+    ``n_epochs`` churn-epoch popularity rows.
 
     Uniform scenarios get a dummy catalog (never drawn: placement_on = 0);
     skewed ones are padded with _PAD_LOGIT rows.  Pad triples are the first
-    n_replicas server ids — valid, but selected with probability ~0."""
+    n_replicas server ids — valid, but selected with probability ~0.
+    epoch_logits is always emitted canonically: single-epoch placements
+    mirror the global law in row 0 (identical values, so canonical draws
+    are bit-identical to the pre-epoch behavior); unused epoch rows are
+    all-_PAD_LOGIT and never indexed by placement_epoch."""
     n_rep = cluster.n_replicas
     dummy_row = np.arange(n_rep, dtype=np.int32)[None, :]
     if chunk_logits is None:
@@ -338,7 +406,18 @@ def _pad_placement(chunk_logits, chunk_locals, cluster: "Cluster",
         locals_ = np.concatenate(
             [locals_, np.repeat(dummy_row, n_chunks - C, axis=0)], axis=0)
         on = 1.0
-    return (jnp.asarray(logits), jnp.asarray(locals_), jnp.float32(on))
+    if epoch_logits is None:
+        elog = np.full((n_epochs, n_chunks), _PAD_LOGIT, np.float32)
+        elog[0] = logits
+    else:
+        elog = np.asarray(epoch_logits, np.float32)
+        E, C = elog.shape
+        assert E <= n_epochs and C <= n_chunks, (elog.shape, n_epochs,
+                                                 n_chunks)
+        elog = np.pad(elog, ((0, n_epochs - E), (0, n_chunks - C)),
+                      constant_values=_PAD_LOGIT)
+    return (jnp.asarray(logits), jnp.asarray(locals_), jnp.float32(on),
+            jnp.asarray(elog))
 
 
 def realize(scenario: Scenario, cluster: "Cluster", rates: "Rates",
@@ -357,8 +436,18 @@ def realize(scenario: Scenario, cluster: "Cluster", rates: "Rates",
     rng = np.random.default_rng(scenario.seed)
     base, wstart, wend, wmult = _fleet_arrays(scenario.fleet, cluster, T, rng)
     lam_shape = traffic_shape(scenario.traffic, T, rng)
-    chunk_logits, chunk_locals = _placement_arrays(
+    chunk_logits, chunk_locals, epoch_logits = _placement_arrays(
         scenario.placement, cluster, rng)
+    # slot -> churn-epoch map (trace-backed placements re-derive their
+    # catalog per episode; everything else is single-epoch)
+    placement_epoch = (
+        jnp.asarray(np.asarray(scenario.placement.realize_epochs(T),
+                               np.int32))
+        if hasattr(scenario.placement, "realize_epochs") else None)
+    # per-task size-multiplier law: lognormal normalized to mean exactly 1
+    # (mu = -sigma^2/2), so lam_cap below needs no size correction; always
+    # concrete scalars so every realization shares one pytree structure
+    sigma = float(scenario.sizes.sigma)
     placement_on = None
     if pad is not None:
         E = wstart.shape[0]
@@ -367,8 +456,11 @@ def realize(scenario: Scenario, cluster: "Cluster", rates: "Rates",
         wend = np.pad(wend, (0, pad.n_windows - E))      # start == end: inert
         wmult = np.pad(wmult, ((0, pad.n_windows - E), (0, 0), (0, 0)),
                        constant_values=1.0)
-        chunk_logits, chunk_locals, placement_on = _pad_placement(
-            chunk_logits, chunk_locals, cluster, pad.n_chunks)
+        chunk_logits, chunk_locals, placement_on, epoch_logits = \
+            _pad_placement(chunk_logits, chunk_locals, epoch_logits,
+                           cluster, pad.n_chunks, pad.n_epochs)
+        if placement_epoch is None:
+            placement_epoch = jnp.zeros(T, jnp.int32)
     scen = ScenarioData(
         lam_shape=jnp.asarray(lam_shape),
         base_speed=jnp.asarray(base),
@@ -378,6 +470,10 @@ def realize(scenario: Scenario, cluster: "Cluster", rates: "Rates",
         chunk_logits=chunk_logits,
         chunk_locals=chunk_locals,
         placement_on=placement_on,
+        size_mu=jnp.float32(-0.5 * sigma * sigma),
+        size_sigma=jnp.float32(sigma),
+        epoch_logits=epoch_logits,
+        placement_epoch=placement_epoch,
     )
     lam_cap = rates.alpha * cluster.M * capacity_scale(scen, T)
     return scen, lam_cap

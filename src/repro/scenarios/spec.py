@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import operator
 from typing import Optional, Union
 
@@ -163,15 +164,44 @@ def _traffic_from_parts(parts: tuple) -> Traffic:
 
 @dataclasses.dataclass(frozen=True)
 class PlacementSpec:
-    """Where chunk replicas live; 'zipf' makes some triples hot."""
+    """Where chunk replicas live; 'zipf' makes some triples hot.
+
+    ``hot_rack`` pins the replica triples of the most popular catalog rows
+    (the top ``hot_frac`` by Zipf rank) entirely inside one rack — the
+    adversarial "all hot data on one rack" placement, where locality-blind
+    routing must funnel most of the load through K-th of the fleet."""
 
     kind: str = "uniform"                  # |zipf
     zipf_s: float = 1.2                    # popularity exponent
     chunks_per_server: int = 4             # catalog size C = this * M
+    hot_rack: Optional[int] = None         # rack holding all hot replicas
+    hot_frac: float = 0.25                 # top fraction of rows pinned
 
     def merge(self, other: "PlacementSpec") -> "PlacementSpec":
         """Rightmost non-uniform placement wins (catalogs do not union)."""
         return other if other.kind != "uniform" else self
+
+
+@dataclasses.dataclass(frozen=True)
+class SizeSpec:
+    """Per-task service-size multiplier law: lognormal, normalized to mean 1.
+
+    ``sigma`` is the log-space standard deviation; the realizer pairs it
+    with ``mu = -sigma^2 / 2`` so the multiplier's mean is exactly 1 and
+    the capacity-region edge (lam_cap) is size-law invariant.  sigma = 0
+    is the exact identity — the simulator's sampled durations are
+    untouched bit-for-bit.  The trace->scenario compiler fits sigma from
+    observed task sizes; merge composes independent lognormal factors
+    (variances add in log space)."""
+
+    sigma: float = 0.0
+
+    @property
+    def trivial(self) -> bool:
+        return self.sigma == 0.0
+
+    def merge(self, other: "SizeSpec") -> "SizeSpec":
+        return SizeSpec(sigma=math.sqrt(self.sigma ** 2 + other.sigma ** 2))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,6 +210,7 @@ class Scenario:
     fleet: FleetSpec = FleetSpec()
     traffic: Traffic = TrafficSpec(kind="stationary")
     placement: PlacementSpec = PlacementSpec()
+    sizes: SizeSpec = SizeSpec()
     seed: int = 0                          # host-side realization seed
     description: str = ""
 
@@ -228,6 +259,7 @@ def compose(*scenarios, name: Optional[str] = None,
         fleet=merged("fleet"),
         traffic=merged("traffic"),
         placement=merged("placement"),
+        sizes=merged("sizes"),
         seed=seed if seed is not None
         else functools.reduce(operator.xor, (s.seed for s in specs)),
         description=description or (
@@ -238,21 +270,23 @@ def compose(*scenarios, name: Optional[str] = None,
 COMPOSE_DEPTH = 2   # pairwise compose() stays on the canonical signature
 
 
-def registry_limits(scenarios=None) -> tuple[int, int]:
+def registry_limits(scenarios=None) -> tuple[int, int, int]:
     """Registry-wide shape maxima for canonical pytree padding.
 
     Returns (max event-window count, max chunks_per_server among non-uniform
-    placements; 0 when every scenario places uniformly).  build.canonical_pad
-    turns these into concrete array shapes so every scenario realizes to the
-    same pytree signature and the jit'd simulator compiles once for the
-    whole sweep.
+    placements — 0 when every scenario places uniformly — and max placement
+    churn-epoch count).  build.canonical_pad turns these into concrete array
+    shapes so every scenario realizes to the same pytree signature and the
+    jit'd simulator compiles once for the whole sweep.
 
     The window budget is ``COMPOSE_DEPTH`` x the largest single count, so a
     ``compose()`` of up to that many registry scenarios — whose windows
     union — still fits the canonical shapes (pads are inert rows; the cost
     is a few extra [M, 3] multiplier rows per scenario).  Chunk catalogs
-    need no such headroom: placement merge is rightmost-wins, never a
-    union.
+    and churn epochs need no such headroom: placement merge is
+    rightmost-wins, never a union.  Epoch counts come from the duck-typed
+    ``n_epochs`` attribute trace-backed placements carry (synthetic
+    placements are single-epoch).
     """
     specs = tuple(get_scenario(s) for s in scenarios) \
         if scenarios is not None else tuple(SCENARIOS.values())
@@ -260,7 +294,9 @@ def registry_limits(scenarios=None) -> tuple[int, int]:
         (len(s.fleet.windows) for s in specs), default=0)
     chunks = max((s.placement.chunks_per_server for s in specs
                   if s.placement.kind != "uniform"), default=0)
-    return n_windows, chunks
+    epochs = max((getattr(s.placement, "n_epochs", 1) for s in specs),
+                 default=1)
+    return n_windows, chunks, epochs
 
 
 def get_scenario(s: Union[str, Scenario, None]) -> Scenario:
@@ -333,6 +369,15 @@ register(Scenario(
     placement=PlacementSpec(kind="zipf", zipf_s=1.2),
     description="Zipf(1.2) chunk popularity: a few replica triples receive "
                 "most of the tasks (hot data)"))
+
+register(Scenario(
+    "adversarial_placement",
+    placement=PlacementSpec(kind="zipf", zipf_s=1.2, hot_rack=0,
+                            hot_frac=0.25),
+    description="adversarial placement: every hot chunk's replica triple "
+                "lives entirely on rack 0, so locality-aware routing "
+                "funnels most of the load through one rack while the rest "
+                "of the fleet only sees remote (gamma) service"))
 
 # -- per-class (network-tier) degradation and correlated failures -----------
 # generators.py is imported late so its `from .spec import WindowSpec` sees

@@ -58,6 +58,7 @@ class EngineStats:
     latency_hist: Optional[np.ndarray] = None        # telemetry.hist bins
     latency_p50: float = float("nan")
     latency_p95: float = float("nan")
+    note: Optional[str] = None     # set when percentiles are NaN (and why)
 
 
 class ServeEngine:
@@ -178,11 +179,16 @@ class ServeEngine:
                   / max(self.router.stats.decisions, 1))
         hist = np_hist(comp) if comp else None
         p50 = p95 = float("nan")
+        note = None
         if hist is not None:
             p50, p95 = percentiles(hist, (50, 95))
+        if not np.isfinite(p50) or not np.isfinite(p95):
+            note = (f"zero completions in {self.tick} ticks: latency "
+                    f"p50/p95 are NaN (not 0 — nothing finished)")
+            print(f"[serve] NOTE: {note}")
         return EngineStats(
             completions=comp, locality=loc / max(len(self.done), 1),
             probes_per_decision=probes,
             queue_depth_trace=np.asarray(self._queue_depth_trace, np.int64),
             batch_size_trace=np.asarray(self._batch_size_trace, np.int64),
-            latency_hist=hist, latency_p50=p50, latency_p95=p95)
+            latency_hist=hist, latency_p50=p50, latency_p95=p95, note=note)

@@ -111,6 +111,12 @@ def sojourn_percentiles(tele: Telemetry, tcfg: TelemetryConfig,
     out = {f"p{p}": v for p, v in zip(ps, vals)}
     out["n"] = float(hist.sum())
     out["dropped"] = float(np.asarray(tele.sojourn_dropped))
+    if out["n"] == 0:
+        # NaN percentiles are deliberate — an empty histogram has no
+        # quantiles; consumers surface this note instead of printing NaN
+        # as if it were a measurement (benchmarks/scenarios.py)
+        out["note"] = ("empty sojourn histogram (0 completions recorded): "
+                       "percentiles are NaN")
     return out
 
 

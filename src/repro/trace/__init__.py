@@ -1,0 +1,63 @@
+"""Trace-replay serving subsystem: ingest -> compile -> replay.
+
+Three layers over one versioned arrival-log format (format.SCHEMA):
+
+  ingest    ``format`` — ArrivalLog (JSONL + packed-npz round-trip),
+            ``validate_log`` schema checking, and streaming slot-batch
+            readers; ``synth`` — generators for production-shaped traces
+            (diurnal x flash crowds x placement churn, Zipf popularity).
+  compile   ``compile.scenario_from_trace`` — lower a log onto the
+            scenario axes (binned lam_shape, per-churn-epoch placement
+            catalog inside the canonical pad, fitted size law).
+  replay    ``replay.ReplayEngine`` — high-throughput replay of a log
+            through the fused route_commit megakernel: double-buffered
+            host->device chunk transfer, donated arrival buffers, one
+            compiled chunk step (imported lazily: the replay layer pulls
+            in the simulator, which this package must not load at
+            scenario-registry import time).
+
+The canonical production-day trace is registered as the ``production_day``
+registry scenario below — trace-backed scenarios realize within the
+canonical ScenarioPad, so the one-compile sweep invariant holds across
+synthetic and trace-lowered entries alike."""
+from .format import (          # noqa: F401
+    SCHEMA,
+    ArrivalLog,
+    SlotBatch,
+    ensure_valid,
+    iter_slot_batches,
+    load,
+    read_jsonl,
+    read_npz,
+    stream_slot_batches,
+    validate_log,
+    write_jsonl,
+    write_npz,
+)
+from .synth import production_day, synth_trace  # noqa: F401
+from .compile import (         # noqa: F401
+    TracePlacement,
+    TraceTraffic,
+    arrival_rows,
+    catalog_plan,
+    fit_size_sigma,
+    scenario_from_trace,
+)
+
+from ..scenarios.spec import SCENARIOS, register
+
+if "production_day" not in SCENARIOS:
+    # the source stays the cached thunk, so realize() resynthesizes nothing;
+    # lowering itself synthesizes once here to fit the size law
+    register(scenario_from_trace(production_day, name="production_day",
+                                 seed=11))
+
+
+def __getattr__(name):
+    # replay imports the simulator (repro.core); loading it here would
+    # cycle through scenarios/__init__'s tail import of this package
+    if name in ("ReplayEngine", "ReplayResult", "replay_trace_count",
+                "reset_replay_trace_count"):
+        from . import replay
+        return getattr(replay, name)
+    raise AttributeError(name)

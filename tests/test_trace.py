@@ -1,0 +1,205 @@
+"""Trace subsystem: ingest round-trips, schema validation, streaming
+batches, compiler determinism, canonical-pad compatibility, and the
+replay-vs-simulator agreement criterion on the production-day trace."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Cluster, Rates, SimConfig
+from repro.core.simulator import simulate_grid
+from repro.scenarios import canonical_pad, get_scenario, realize, \
+    scenario_names
+from repro.trace import (
+    ArrivalLog,
+    ReplayEngine,
+    arrival_rows,
+    catalog_plan,
+    iter_slot_batches,
+    load as load_log,
+    production_day,
+    read_jsonl,
+    read_npz,
+    replay_trace_count,
+    reset_replay_trace_count,
+    scenario_from_trace,
+    stream_slot_batches,
+    synth_trace,
+    validate_log,
+    write_jsonl,
+    write_npz,
+)
+
+
+def small_log(n=400, seed=3, **kw):
+    kw.setdefault("churn_t", (0.5,))
+    kw.setdefault("n_tenants", 2)
+    kw.setdefault("n_chunks", 64)
+    return synth_trace(name="small", n_tasks=n, seed=seed, **kw)
+
+
+def assert_logs_equal(a: ArrivalLog, b: ArrivalLog):
+    assert a.schema == b.schema and a.name == b.name
+    assert a.horizon == pytest.approx(b.horizon)
+    np.testing.assert_array_equal(a.chunk, b.chunk)
+    np.testing.assert_allclose(a.t, b.t, rtol=0, atol=0)
+    np.testing.assert_allclose(a.size, b.size, rtol=0, atol=0)
+    assert (a.tenant is None) == (b.tenant is None)
+    if a.tenant is not None:
+        np.testing.assert_array_equal(a.tenant, b.tenant)
+    assert a.churn_t == pytest.approx(b.churn_t)
+
+
+# ---------------------------------------------------------------------------
+# ingest: encodings round-trip and agree with each other
+# ---------------------------------------------------------------------------
+
+
+def test_jsonl_npz_roundtrip_equal(tmp_path):
+    log = small_log()
+    pj, pn = tmp_path / "a.jsonl", tmp_path / "a.npz"
+    write_jsonl(log, pj)
+    write_npz(log, pn)
+    from_jsonl = read_jsonl(pj)
+    from_npz = read_npz(pn)
+    assert_logs_equal(from_jsonl, log)
+    assert_logs_equal(from_npz, log)
+    assert_logs_equal(from_jsonl, from_npz)
+    # extension-dispatched loader hits the same decoders
+    assert_logs_equal(load_log(pj), from_jsonl)
+    assert_logs_equal(load_log(pn), from_npz)
+
+
+def test_loader_rejects_unknown_extension(tmp_path):
+    with pytest.raises(ValueError, match="extension"):
+        load_log(tmp_path / "a.csv")
+
+
+def test_validate_log_catches_schema_violations():
+    log = small_log()
+    assert validate_log(log) == []
+    bad = dataclasses.replace(log, t=log.t[::-1].copy())
+    assert any("sorted" in e for e in validate_log(bad))
+    bad = dataclasses.replace(log, schema="repro.trace/v0")
+    assert any("schema" in e for e in validate_log(bad))
+    bad = dataclasses.replace(log, size=-log.size)
+    assert any("size" in e for e in validate_log(bad))
+    bad = dataclasses.replace(log, churn_t=(0.8, 0.2))
+    assert any("churn_t" in e for e in validate_log(bad))
+
+
+def test_streaming_batches_match_in_memory(tmp_path):
+    log = small_log()
+    p = tmp_path / "s.jsonl"
+    write_jsonl(log, p)
+    T, B = 64, 20
+    mem = list(iter_slot_batches(log, T, B))
+    stream = list(stream_slot_batches(p, T, B))
+    assert len(mem) == len(stream) == -(-T // B)
+    total = 0
+    for bm, bs in zip(mem, stream):
+        assert bm.slot0 == bs.slot0
+        np.testing.assert_array_equal(bm.counts, bs.counts)
+        np.testing.assert_array_equal(bm.slot, bs.slot)
+        np.testing.assert_array_equal(bm.chunk, bs.chunk)
+        np.testing.assert_allclose(bm.size, bs.size, rtol=0)
+        total += bm.slot.shape[0]
+    assert total == log.n_tasks
+
+
+# ---------------------------------------------------------------------------
+# compiler: deterministic lowering within the canonical signature
+# ---------------------------------------------------------------------------
+
+
+def test_catalog_plan_partitions_mass():
+    log = small_log(n=2000, n_chunks=256)
+    budget = 48
+    plans = catalog_plan(log, budget)
+    assert sum(p.mass.shape[0] for p in plans) == budget
+    assert sum(float(p.mass.sum()) for p in plans) == log.n_tasks
+    rows = arrival_rows(log, budget)
+    assert rows.min() >= 0 and rows.max() < budget
+    # per-row mass from the task stream matches the plan exactly
+    np.testing.assert_allclose(
+        np.bincount(rows, minlength=budget),
+        np.concatenate([p.mass for p in plans]))
+
+
+def test_compiler_determinism_bit_identical():
+    log = small_log()
+    cluster, rates, T = Cluster(M=8, K=2), Rates(), 256
+    a = realize(scenario_from_trace(log, seed=5), cluster, rates, T)
+    b = realize(scenario_from_trace(log, seed=5), cluster, rates, T)
+    sa, sb = a[0], b[0]
+    assert a[1] == b[1]
+    for la, lb in zip(jax.tree_util.tree_leaves(sa),
+                      jax.tree_util.tree_leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # a different scenario seed moves the replica triples
+    c = realize(scenario_from_trace(log, seed=6), cluster, rates, T)[0]
+    assert not np.array_equal(np.asarray(c.chunk_locals),
+                              np.asarray(sa.chunk_locals))
+
+
+def test_production_day_is_registered_and_realizes_canonically():
+    assert "production_day" in scenario_names()
+    assert "adversarial_placement" in scenario_names()
+    scn = get_scenario("production_day")
+    cluster, rates = Cluster(M=8, K=2), Rates()
+    scen, lam_cap = realize(scn, cluster, rates, 128,
+                            pad=canonical_pad(cluster))
+    assert lam_cap > 0
+    assert scen.placement_epoch is not None
+    assert scen.epoch_logits is not None
+    # three churn epochs appear on the slot grid
+    assert set(np.asarray(scen.placement_epoch).tolist()) == {0, 1, 2}
+
+
+# ---------------------------------------------------------------------------
+# replay engine: one compile, and agreement with the simulator
+# ---------------------------------------------------------------------------
+
+
+def test_replay_single_compile_and_throughput_fields():
+    log = small_log(n=600)
+    eng = ReplayEngine(log, Cluster(M=8, K=2), Rates(),
+                       cfg=SimConfig(T=256, warmup=64), chunk_slots=64)
+    reset_replay_trace_count()
+    r1 = eng.run(seed=0)
+    assert replay_trace_count() == 1       # all chunks share one signature
+    r2 = eng.run(seed=1)
+    assert replay_trace_count() == 1       # second run hits the cache
+    assert r1.trace_count == 1      # one compile serves every chunk
+    assert r2.trace_count == 0      # warm run: no recompilation at all
+    assert r1.routed_tasks == log.n_tasks
+    assert r1.tasks_per_s > 0 and r1.wall_s > 0
+    assert float(r1.result.mean_completion_norm) > 0
+    # full-BP variant shares nothing with the pod cache but also compiles once
+    eng2 = ReplayEngine(log, Cluster(M=8, K=2), Rates(),
+                        algo="balanced_pandas",
+                        cfg=SimConfig(T=256, warmup=64), chunk_slots=64)
+    reset_replay_trace_count()
+    eng2.run(seed=0)
+    assert replay_trace_count() == 1
+
+
+def test_replay_agrees_with_simulator_on_production_day():
+    """The acceptance criterion: mean delay within 5% of the per-slot
+    simulator on the production-day trace at load 0.45 (M=24 keeps the
+    hot-row utilization ~0.47 so neither side is knife-edge; measured
+    gap at this frozen configuration: 1.3%)."""
+    cluster, rates = Cluster(M=24, K=4), Rates()
+    cfg = SimConfig(T=30_000, warmup=6_000)
+    log = production_day(n_tasks=12_960)    # == load 0.45 at T=30k
+    eng = ReplayEngine(log, cluster, rates, cfg=cfg, chunks_per_server=12)
+    assert eng.load == pytest.approx(0.45, abs=1e-6)
+    replay = np.mean([float(eng.run(seed=s).result.mean_completion_norm)
+                      for s in range(8)])
+    scn = scenario_from_trace(log, chunks_per_server=12, seed=0)
+    grid = simulate_grid("balanced_pandas_pod", cluster, rates,
+                         [eng.load], n_seeds=16, cfg=cfg, scenario=scn)
+    sim = float(np.mean(np.asarray(grid.mean_completion_norm)[:, 0]))
+    rel = abs(replay - sim) / sim
+    assert rel < 0.05, f"replay {replay:.4f} vs sim {sim:.4f}: rel {rel:.4f}"
