@@ -8,6 +8,7 @@ from repro.core.ballsbins import max_load, theory_d, theory_d1
 
 
 def main(preset=None):
+    """Measure max bin load vs the paper's d=1 / d>=2 asymptotics."""
     rows = []
     for n in (256, 1024, 4096):
         keys = jax.random.split(jax.random.PRNGKey(n), 5)

@@ -34,6 +34,7 @@ ALGO_LABELS = {
 
 @dataclasses.dataclass(frozen=True)
 class Preset:
+    """One benchmark scale: cluster + rates + run length + sweep axes."""
     name: str
     cluster: Cluster
     rates: Rates
@@ -42,6 +43,12 @@ class Preset:
     high_loads: tuple
     fixed_load: float
     n_seeds: int
+    # mega-sweep grid axes (benchmarks/scenarios.py grid_main): the
+    # one-program registry sweep runs scenario x grid_loads x grid_seeds
+    # per policy; grid_seeds are the Monte-Carlo replications behind the
+    # mean +/- CI columns.
+    grid_loads: tuple = (0.45, 0.7, 0.9)
+    grid_seeds: int = 4
 
 
 # CI-sized: small fleet, short runs — exercises every code path in seconds.
@@ -54,6 +61,8 @@ SMOKE = Preset(
     high_loads=(0.8,),
     fixed_load=0.8,
     n_seeds=1,
+    grid_loads=(0.45, 0.7, 0.9),
+    grid_seeds=4,
 )
 
 QUICK = Preset(
@@ -65,6 +74,8 @@ QUICK = Preset(
     high_loads=(0.85, 0.9, 0.95),
     fixed_load=0.9,
     n_seeds=2,
+    grid_loads=(0.3, 0.5, 0.7, 0.9),
+    grid_seeds=8,
 )
 
 # paper §V scale: 500 servers, 10 racks of 50; finer slots (1% of local
@@ -78,10 +89,13 @@ PAPER = Preset(
     high_loads=(0.85, 0.9, 0.95),
     fixed_load=0.9,
     n_seeds=4,
+    grid_loads=(0.3, 0.5, 0.7, 0.8, 0.9, 0.95),
+    grid_seeds=8,
 )
 
 
 def preset_from_argv() -> Preset:
+    """Resolve --preset=smoke|quick|paper from argv (default quick)."""
     if "--preset=paper" in sys.argv or "paper" in sys.argv[1:]:
         return PAPER
     if "--preset=smoke" in sys.argv or "smoke" in sys.argv[1:]:
@@ -125,9 +139,74 @@ def run_figure(preset: Preset, loads, service_dist: str, name: str,
 
 
 def save_artifact(name: str, obj: dict):
+    """Dump one benchmark's result dict to ``artifacts/bench/<name>.json``."""
     os.makedirs(ART, exist_ok=True)
     with open(os.path.join(ART, f"{name}.json"), "w") as f:
         json.dump(obj, f, indent=1)
+
+
+# two-sided 95% Student-t critical values by degrees of freedom (1..30;
+# larger samples use the normal 1.96) — table instead of scipy, which the
+# container does not ship
+_T95 = (12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262,
+        2.228, 2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101,
+        2.093, 2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052,
+        2.048, 2.045, 2.042)
+
+
+def mean_ci(x, axis=0):
+    """Mean and 95% confidence half-width over ``axis`` (Student t on the
+    standard error; NaN cells are dropped per-position).
+
+    Returns ``(mean, ci)`` arrays with ``axis`` reduced.  ``n == 1``
+    yields ci = NaN (a single replication has no spread estimate) — the
+    mega-sweep's mean +/- CI columns come from here, so the grid presets
+    keep ``grid_seeds >= 4``.
+    """
+    x = np.asarray(x, np.float64)
+    n = np.sum(np.isfinite(x), axis=axis)
+    mean = np.nanmean(np.where(np.isfinite(x), x, np.nan), axis=axis)
+    sd = np.nanstd(np.where(np.isfinite(x), x, np.nan), axis=axis, ddof=1)
+    tcrit = np.where(n > 1, np.take(np.asarray(_T95 + (1.96,)),
+                                    np.minimum(np.maximum(n - 1, 1),
+                                               len(_T95) + 1) - 1), np.nan)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        ci = np.where(n > 1, tcrit * sd / np.sqrt(np.maximum(n, 1)), np.nan)
+    return mean, ci
+
+
+def append_trajectory(path: str, point: dict) -> None:
+    """Append one datapoint to a ``{"schema": 1, "runs": [...]}`` perf
+    trajectory file (BENCH_router.json / BENCH_sweep.json).
+
+    A corrupt/unreadable trajectory is NEVER silently clobbered: the bad
+    file is preserved at ``<path>.bad`` and the append fails loudly — perf
+    history is the whole point of these files; losing one quietly on a
+    truncated write or a merge-conflict marker defeats PR-over-PR
+    tracking.
+    """
+    data = {"schema": 1, "runs": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError) as e:
+            bad = path + ".bad"
+            os.replace(path, bad)
+            raise RuntimeError(
+                f"{path} is corrupt or unreadable ({e}); moved it to {bad} "
+                "instead of overwriting the perf trajectory — inspect/"
+                "restore it, then re-run") from e
+        if not isinstance(data.get("runs"), list):
+            bad = path + ".bad"
+            os.replace(path, bad)
+            raise RuntimeError(
+                f"{path} parsed but has no 'runs' list; moved it to {bad} "
+                "instead of overwriting the perf trajectory")
+    data["runs"].append(point)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
 
 
 def ascii_plot(out: dict, width: int = 64, height: int = 16,
@@ -161,6 +240,7 @@ def ascii_plot(out: dict, width: int = 64, height: int = 16,
 
 
 def print_table(out: dict):
+    """Completion-time table for one figure dict (drift-starred cells)."""
     loads = out["loads"]
     print(f"\n== {out['figure']} ({out['preset']} preset, "
           f"{out['service_dist']} service) ==")

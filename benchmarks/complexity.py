@@ -18,6 +18,7 @@ from common import preset_from_argv, save_artifact
 
 
 def probes_table():
+    """Pod probes vs full-sweep O(M) per routing decision (paper SIV-C)."""
     rows = []
     for M in (100, 500, 1000, 4000, 16000):
         full = M
@@ -28,6 +29,7 @@ def probes_table():
 
 
 def kernel_throughput(Ms=(128, 512, 2048, 8192), B=256, iters=20):
+    """us per routing decision: pod_route vs full weighted_argmin."""
     from repro.kernels import pod_route, weighted_argmin
     inv = jnp.array([25.0, 50.0, 125.0], jnp.float32)
     out = []
@@ -58,6 +60,7 @@ def kernel_throughput(Ms=(128, 512, 2048, 8192), B=256, iters=20):
 
 
 def main(preset=None):
+    """Print + save the probe-complexity and kernel-throughput tables."""
     probes = probes_table()
     thr = kernel_throughput()
     out = {"probes": probes, "kernel_throughput": thr}

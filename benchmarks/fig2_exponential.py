@@ -3,6 +3,7 @@ from common import ascii_plot, preset_from_argv, print_table, run_figure
 
 
 def main(preset=None):
+    """Reproduce Fig 2 via the shared run_figure harness."""
     p = preset or preset_from_argv()
     out = run_figure(p, p.loads, "geometric", "fig2_exponential")
     print_table(out)

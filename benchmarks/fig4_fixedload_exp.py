@@ -3,6 +3,7 @@ from common import ALGO_LABELS, preset_from_argv, print_table, run_figure
 
 
 def main(preset=None):
+    """Reproduce Fig 4 (completion vs d at fixed load)."""
     p = preset or preset_from_argv()
     out = run_figure(p, (p.fixed_load,), "geometric", "fig4_fixedload_exp")
     print_table(out)

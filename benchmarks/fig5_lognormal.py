@@ -3,6 +3,7 @@ from common import ascii_plot, preset_from_argv, print_table, run_figure
 
 
 def main(preset=None):
+    """Reproduce Fig 5 via the shared run_figure harness."""
     p = preset or preset_from_argv()
     out = run_figure(p, p.loads, "lognormal", "fig5_lognormal")
     print_table(out)

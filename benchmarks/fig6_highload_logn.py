@@ -3,6 +3,7 @@ from common import ascii_plot, preset_from_argv, print_table, run_figure
 
 
 def main(preset=None):
+    """Reproduce Fig 6 via the shared run_figure harness."""
     p = preset or preset_from_argv()
     out = run_figure(p, p.high_loads, "lognormal", "fig6_highload_logn")
     print_table(out)

@@ -3,6 +3,7 @@ from common import ALGO_LABELS, preset_from_argv, print_table, run_figure
 
 
 def main(preset=None):
+    """Reproduce Fig 7 (completion vs d at fixed load, lognormal)."""
     p = preset or preset_from_argv()
     out = run_figure(p, (p.fixed_load,), "lognormal", "fig7_fixedload_logn")
     print_table(out)

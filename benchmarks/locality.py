@@ -11,6 +11,7 @@ from repro.core import simulate_grid
 
 
 def main(preset=None):
+    """Local/rack/remote service-fraction table per algorithm x load."""
     from common import QUICK
     p = preset or preset_from_argv()
     loads = p.loads

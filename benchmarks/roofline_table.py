@@ -28,6 +28,7 @@ DRY = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
 
 
 def hint(row) -> str:
+    """One-line optimization lever for a cell's dominant term."""
     dom = row["dominant"]
     fam = row.get("family", "")
     if dom == "collective":
@@ -47,6 +48,7 @@ def hint(row) -> str:
 
 
 def build_rows(dry_dir=DRY):
+    """Load per-cell dry-run JSON artifacts into table rows."""
     rows = []
     for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
         rec = json.load(open(path))
@@ -82,6 +84,7 @@ def build_rows(dry_dir=DRY):
 
 
 def render(rows, mesh="pod") -> str:
+    """Markdown roofline table for one mesh size."""
     out = [f"### Roofline — {mesh} mesh (256 chips)" if mesh == "pod" else
            f"### Roofline — multi-pod mesh (512 chips)"]
     out.append("| arch | shape | compute s | memory s | collective s | "
@@ -103,6 +106,7 @@ def render(rows, mesh="pod") -> str:
 
 
 def main(preset=None):
+    """Render the roofline tables (skips cleanly with no artifacts)."""
     rows = build_rows()
     if not rows:
         print("(no dry-run artifacts yet — run scripts/run_dryrun_sweep.sh)")

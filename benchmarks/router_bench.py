@@ -19,14 +19,12 @@ fused-router megakernel work will be judged against this file):
 Usage: PYTHONPATH=src python benchmarks/router_bench.py [--preset=smoke]
 """
 import dataclasses
-import json
 import os
-import sys
 import time
 
 import numpy as np
 
-from common import preset_from_argv
+from common import append_trajectory, preset_from_argv
 
 from repro.core import (PodSpec, simulate_grid, simulate_grid_with_telemetry,
                         trace_count)
@@ -92,39 +90,13 @@ def _probe_quality(preset) -> dict:
 
 
 def _append_datapoint(point: dict, path: str = None) -> None:
-    """Append one run to the trajectory file.
-
-    A corrupt/unreadable trajectory is NEVER silently clobbered: the bad
-    file is preserved at ``<path>.bad`` and the append fails loudly — perf
-    history is the whole point of this file, losing it quietly on a
-    truncated write or merge-conflict marker defeats PR-over-PR tracking.
-    """
-    path = path or BENCH_PATH
-    data = {"schema": 1, "runs": []}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                data = json.load(f)
-        except (json.JSONDecodeError, OSError) as e:
-            bad = path + ".bad"
-            os.replace(path, bad)
-            raise RuntimeError(
-                f"{path} is corrupt or unreadable ({e}); moved it to {bad} "
-                "instead of overwriting the perf trajectory — inspect/"
-                "restore it, then re-run") from e
-        if not isinstance(data.get("runs"), list):
-            bad = path + ".bad"
-            os.replace(path, bad)
-            raise RuntimeError(
-                f"{path} parsed but has no 'runs' list; moved it to {bad} "
-                "instead of overwriting the perf trajectory")
-    data["runs"].append(point)
-    with open(path, "w") as f:
-        json.dump(data, f, indent=1)
-        f.write("\n")
+    """Corruption-safe append to the BENCH_router.json trajectory (shared
+    helper: common.append_trajectory; trace_replay.py reuses this too)."""
+    append_trajectory(path or BENCH_PATH, point)
 
 
 def main(preset=None):
+    """Run both measurements and append the BENCH_router.json datapoint."""
     p = preset or preset_from_argv()
     throughput = _throughput(p)
     probes = _probe_quality(p)

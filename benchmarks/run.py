@@ -1,9 +1,10 @@
 """Benchmark orchestrator — one harness per paper figure/table + the
-framework's complexity/roofline reports + the scenario sweep.  Prints a
+framework's complexity/roofline reports + the scenario sweeps.  Prints a
 ``name,seconds,headline`` CSV summary at the end.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--preset=paper|smoke]
-                                                [--only=suite1,suite2]
+``--help`` output is generated from the suite registry (``SUITES``), so
+it can never drift from what ``--only=`` accepts — CI smoke-checks that
+every registered suite is named in it (tests/test_benchmarks_cli.py).
 """
 import os
 import sys
@@ -25,6 +26,75 @@ import router_bench
 import scenarios as scenarios_suite
 import trace_replay
 from common import preset_from_argv
+
+# The suite registry: (name, entry point taking a Preset, one-line help).
+# --only= names, --help text, and the summary CSV all come from here.
+SUITES = [
+    ("fig2_exponential", fig2_exponential.main,
+     "paper Fig 2: mean completion vs load, exponential service"),
+    ("fig3_highload_exp", fig3_highload_exp.main,
+     "paper Fig 3: high-load zoom, exponential service"),
+    ("fig4_fixedload_exp", fig4_fixedload_exp.main,
+     "paper Fig 4: fixed load, completion time vs d, exponential"),
+    ("fig5_lognormal", fig5_lognormal.main,
+     "paper Fig 5: mean completion vs load, heavy-tailed lognormal"),
+    ("fig6_highload_logn", fig6_highload_logn.main,
+     "paper Fig 6: high-load zoom, lognormal service"),
+    ("fig7_fixedload_logn", fig7_fixedload_logn.main,
+     "paper Fig 7: fixed load, completion time vs d, lognormal"),
+    ("locality", locality.main,
+     "local/rack/remote service-fraction table per algorithm"),
+    ("scenarios", scenarios_suite.main,
+     "registry scenario sweep at fixed load + BP-Pod d-sensitivity"),
+    ("grid", scenarios_suite.grid_main,
+     "one-program mega-sweep: scenario x load x seed grid per policy, "
+     "mean +/- CI columns -> BENCH_sweep.json"),
+    ("trace_replay", trace_replay.main,
+     "production-day trace replay throughput vs the per-slot path"),
+    ("router_bench", router_bench.main,
+     "routing throughput + probe-quality d-sweep -> BENCH_router.json"),
+    ("complexity", complexity.main,
+     "probe-count complexity table (Pod probes vs full-sweep O(M))"),
+    ("balls_and_bins", balls_and_bins.main,
+     "power-of-d balls-and-bins sanity check vs theory"),
+    ("roofline", roofline_table.main,
+     "kernel roofline / occupancy table (TPU; skips cells on CPU)"),
+]
+
+FLAGS = [
+    ("--preset=smoke|quick|paper",
+     "cluster scale + run length (default quick; CI uses smoke)"),
+    ("--only=s1,s2", "run only the named suites (see list above)"),
+    ("--grid", "shorthand for --only=grid"),
+    ("--scenarios=n1,n2", "scenarios/grid: restrict the scenario set; "
+     "'a+b' composes registry entries ad hoc"),
+    ("--metrics-out=FILE", "scenarios/grid: collect in-jit telemetry and "
+     "write the JSONL event stream to FILE"),
+    ("--grid-loads=0.45,0.9", "grid: override the preset's load axis"),
+    ("--grid-seeds=N", "grid: override the preset's Monte-Carlo seeds"),
+    ("--policies=p1,p2", "grid: override the policy set"),
+    ("--loop-baseline=K", "grid: loop K scenarios on the pre-sweep path "
+     "for the wall-clock comparison (0 skips; default 3)"),
+]
+
+
+def usage() -> str:
+    """--help text generated from SUITES + FLAGS (cannot drift)."""
+    lines = [
+        "usage: PYTHONPATH=src python -m benchmarks.run [flags]",
+        "",
+        "Runs the registered benchmark suites (all of them by default)",
+        "and prints a name,seconds,headline CSV summary.",
+        "",
+        "suites:",
+    ]
+    for name, _, help_line in SUITES:
+        lines.append(f"  {name:20s} {help_line}")
+    lines.append("")
+    lines.append("flags:")
+    for flag, help_line in FLAGS:
+        lines.append(f"  {flag:24s} {help_line}")
+    return "\n".join(lines)
 
 
 def _headline(name, out):
@@ -56,6 +126,14 @@ def _headline(name, out):
             mw_f = out["probe_quality"]["jsq_maxweight_pod"]["flatness"]
             return (f"BP-Pod {tp['slots_per_s']:.0f} slots/s; regret "
                     f"flatness BP-Pod {bp_f:.2f} vs JSQ-MW-Pod {mw_f:.2f}")
+        if name == "grid":
+            op = next(iter(out["one_program"].values()))
+            head = (f"{len(out['scenarios'])}x{len(out['loads'])}x"
+                    f"{out['seeds']} grid; {op['cells']} cells/policy; "
+                    f"trace_count +{op['trace_count']}")
+            if out.get("speedup_per_cell"):
+                head += f"; {out['speedup_per_cell']:.1f}x vs looped"
+            return head
         if name == "scenarios":
             import numpy as np
             rows = out["scenarios"]
@@ -74,31 +152,24 @@ def _headline(name, out):
 
 
 def main() -> None:
+    """Parse flags, run the selected suites, print the CSV summary."""
+    if "--help" in sys.argv[1:] or "-h" in sys.argv[1:]:
+        print(usage())
+        return
     preset = preset_from_argv()
     print(f"[benchmarks] preset={preset.name} M={preset.cluster.M} "
           f"K={preset.cluster.K} T={preset.cfg.T}")
-    suites = [
-        ("fig2_exponential", fig2_exponential.main),
-        ("fig3_highload_exp", fig3_highload_exp.main),
-        ("fig4_fixedload_exp", fig4_fixedload_exp.main),
-        ("fig5_lognormal", fig5_lognormal.main),
-        ("fig6_highload_logn", fig6_highload_logn.main),
-        ("fig7_fixedload_logn", fig7_fixedload_logn.main),
-        ("locality", locality.main),
-        ("scenarios", scenarios_suite.main),
-        ("trace_replay", trace_replay.main),
-        ("router_bench", router_bench.main),
-        ("complexity", complexity.main),
-        ("balls_and_bins", balls_and_bins.main),
-        ("roofline", roofline_table.main),
-    ]
     only = [a.split("=", 1)[1] for a in sys.argv[1:]
             if a.startswith("--only=")]
+    if "--grid" in sys.argv[1:]:
+        only.append("grid")
+    suites = [(n, fn) for n, fn, _ in SUITES]
     if only:
         wanted = {n for o in only for n in o.split(",") if n}
         unknown = wanted - {n for n, _ in suites}
         if unknown:
-            raise SystemExit(f"--only: unknown suites {sorted(unknown)}")
+            raise SystemExit(f"--only: unknown suites {sorted(unknown)}; "
+                             f"see --help")
         suites = [(n, fn) for n, fn in suites if n in wanted]
     summary = []
     for name, fn in suites:

@@ -33,20 +33,25 @@ ratio), sojourn p50/p95/p99, and pod probe quality (mean rank / routing
 regret vs the O(M) oracle — the observable behind the paper's
 d-sensitivity claim).
 """
+import os
 import sys
 import time
 
 import numpy as np
 
-from common import Preset, preset_from_argv, save_artifact
+from common import (Preset, append_trajectory, mean_ci, preset_from_argv,
+                    save_artifact)
 
 from repro.core import (PodSpec, simulate_grid, simulate_grid_with_telemetry,
-                        trace_count)
+                        simulate_sweep, sweep_grid, trace_count)
 from repro.scenarios import SCENARIOS, canonical_a_max, canonical_pad, compose
-from repro.telemetry import (TelemetryConfig, format_clip_warning,
+from repro.telemetry import (TelemetryConfig, cell_view, format_clip_warning,
                              probe_summary, run_manifest,
                              sojourn_percentiles, to_events, windowed_drift,
                              write_jsonl)
+
+BENCH_SWEEP_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_sweep.json")
 
 ALGOS = ("balanced_pandas", "balanced_pandas_pod", "jsq_maxweight_pod")
 
@@ -123,6 +128,7 @@ def _selected_scenarios() -> dict:
 
 
 def main(preset=None):
+    """Fixed-load scenario sweep + BP-Pod d-sensitivity (see module doc)."""
     p = preset or preset_from_argv()
     selected = _selected_scenarios()
     # canonical padding over the FULL registry (not just the selection):
@@ -222,5 +228,214 @@ def _print_table(out: dict):
           "placement-oblivious, see repro.scenarios docstring)")
 
 
+# ---------------------------------------------------------------------------
+# One-program mega-sweep: the full scenario x load x seed grid per policy
+# (core.simulate_sweep), with mean +/- CI columns and a looped-baseline
+# wall-clock comparison -> BENCH_sweep.json
+# ---------------------------------------------------------------------------
+
+GRID_POLICIES = ("balanced_pandas", "balanced_pandas_pod",
+                 "jsq_maxweight_pod")
+
+
+def _flag(name: str, default=None):
+    """Value of ``--<name>=...`` from argv, or ``default``."""
+    for a in sys.argv[1:]:
+        if a.startswith(f"--{name}="):
+            return a.split("=", 1)[1]
+    return default
+
+
+def _grid_axes(preset: Preset):
+    """(scenario labels, loads, n_seeds, policies) after flag overrides."""
+    selected = _selected_scenarios()
+    loads = _flag("grid-loads")
+    loads = (tuple(float(x) for x in loads.split(",") if x) if loads
+             else tuple(preset.grid_loads))
+    n_seeds = int(_flag("grid-seeds", preset.grid_seeds))
+    pols = _flag("policies")
+    pols = (tuple(p for p in pols.split(",") if p) if pols
+            else GRID_POLICIES)
+    unknown = set(pols) - set(ALGOS) - {"jsq_maxweight", "jsq_priority",
+                                        "fcfs"}
+    if unknown:
+        raise SystemExit(f"--policies: unknown {sorted(unknown)}")
+    return selected, loads, n_seeds, pols
+
+
+def grid_main(preset=None):
+    """Run the registry benchmark grid as ONE compiled program per policy.
+
+    For every policy, the full scenario x load x seed grid is stacked
+    (scenarios.stack_scenarios), vmapped, and — on multi-device hosts —
+    shard_mapped across devices by ``core.simulate_sweep``; the report
+    carries mean +/- 95% CI columns over the seed replications.  A looped
+    baseline (the pre-mega-sweep per-scenario ``simulate_grid`` loop) is
+    timed on a subset for the wall-clock comparison, and the datapoint is
+    appended (corruption-safely) to ``BENCH_sweep.json``.
+    """
+    p = preset or preset_from_argv()
+    selected, loads, n_seeds, policies = _grid_axes(p)
+    labels = list(selected)
+    scen_specs = list(selected.values())
+    pad = canonical_pad(p.cluster)
+    need = max((len(s.fleet.windows) for n, s in selected.items()
+                if n not in SCENARIOS), default=0)
+    if need > pad.n_windows:
+        pad = pad._replace(n_windows=need)
+    _, _, _, a_max = sweep_grid(p.cluster, p.rates, p.cfg, loads,
+                                scenarios=scen_specs, pad=pad)
+    metrics_out = _metrics_out_path()
+    tcfg = TelemetryConfig() if metrics_out else None
+    sink = [] if metrics_out else None
+    n_cells = len(labels) * len(loads) * n_seeds
+    print(f"[grid] {len(labels)} scenarios x {len(loads)} loads x "
+          f"{n_seeds} seeds = {n_cells} cells per policy "
+          f"(a_max={a_max}, policies: {', '.join(policies)})")
+
+    cells = {}
+    one_program = {}
+    for algo in policies:
+        tc0 = trace_count()
+        t0 = time.time()
+        names, res, tele = simulate_sweep(
+            algo, p.cluster, p.rates, loads, n_seeds, p.cfg,
+            scenarios=scen_specs, pad=pad, a_max=a_max, telemetry=tcfg)
+        t = np.asarray(res.mean_completion_norm)    # [S, seeds, L]
+        wall = time.time() - t0
+        one_program[algo] = {"wall_s": wall, "cells": n_cells,
+                             "cells_per_s": n_cells / max(wall, 1e-9),
+                             "trace_count": trace_count() - tc0}
+        mean, ci = mean_ci(t, axis=1)               # [S, L]
+        drift = np.asarray(res.drift).mean(axis=1)
+        clip = np.asarray(res.clip_fraction).mean(axis=1)
+        cells[algo] = {
+            lbl: {str(l): {"mean": float(mean[s, j]), "ci": float(ci[s, j]),
+                           "drift": float(drift[s, j]),
+                           "clip_fraction": float(clip[s, j])}
+                  for j, l in enumerate(loads)}
+            for s, lbl in enumerate(labels)}
+        print(f"[grid] {algo:20s} {wall:7.1f}s "
+              f"({one_program[algo]['cells_per_s']:.1f} cells/s, "
+              f"trace_count +{one_program[algo]['trace_count']})")
+        if tcfg is not None:
+            _grid_cell_events(p, algo, labels, loads, n_seeds, tele, tcfg,
+                              sink, wall)
+
+    looped = _looped_baseline(p, policies[0], scen_specs, labels, loads,
+                              n_seeds, pad, a_max, tcfg)
+    speedup = None
+    if looped:
+        looped["cells_per_s_one_program"] = \
+            one_program[policies[0]]["cells_per_s"]
+        speedup = (one_program[policies[0]]["cells_per_s"]
+                   / max(looped["cells_per_s"], 1e-9))
+        print(f"[grid] looped baseline ({looped['n_scenarios']} scenarios, "
+              f"{looped['cells']} cells): {looped['wall_s']:.1f}s -> "
+              f"one-program speedup {speedup:.1f}x per cell")
+
+    out = {"figure": "grid", "preset": p.name, "loads": list(loads),
+           "seeds": n_seeds, "policies": list(policies),
+           "scenarios": labels, "cells": cells,
+           "one_program": one_program, "looped_baseline": looped,
+           "speedup_per_cell": speedup}
+    save_artifact("grid", out)
+    _print_grid_table(out)
+    warn = format_clip_warning(
+        [(f"{algo}/{lbl}@rho={l}", c["clip_fraction"])
+         for algo, rows in cells.items() for lbl, by_load in rows.items()
+         for l, c in by_load.items()])
+    if warn:
+        print(warn)
+    if metrics_out:
+        write_jsonl(metrics_out, sink, append=False)
+        print(f"[grid] wrote {len(sink)} telemetry events -> {metrics_out}")
+    append_trajectory(BENCH_SWEEP_PATH, {
+        "date": time.strftime("%Y-%m-%d"),
+        "preset": p.name, "M": p.cluster.M, "K": p.cluster.K,
+        "T": p.cfg.T, "route_mode": p.cfg.route_mode,
+        "grid": {"scenarios": len(labels), "loads": list(loads),
+                 "seeds": n_seeds, "cells_per_policy": n_cells},
+        "policies": list(policies),
+        "one_program": one_program,
+        "looped_baseline": looped,
+        "speedup_per_cell": speedup,
+    })
+    print(f"[grid] appended datapoint -> {BENCH_SWEEP_PATH}")
+    return out
+
+
+def _looped_baseline(p, algo, scen_specs, labels, loads, n_seeds, pad,
+                     a_max, tcfg=None):
+    """Time the pre-mega-sweep path — a Python loop of per-scenario
+    ``simulate_grid`` calls — on ``--loop-baseline=K`` scenarios (default
+    min(3, all); 0 skips).  Same pad / a_max / keys / telemetry config as
+    the one-program sweep, so each baseline cell is bit-identical to the
+    stacked cell (tests/test_sweep.py) and the wall-clock ratio is purely
+    the orchestration difference."""
+    import jax
+    k = _flag("loop-baseline")
+    k = min(len(labels), 3) if k is None else min(len(labels), int(k))
+    if k <= 0:
+        return None
+    t0 = time.time()
+    for spec in scen_specs[:k]:
+        if tcfg is None:
+            res = simulate_grid(algo, p.cluster, p.rates, list(loads),
+                                n_seeds, p.cfg, scenario=spec, pad=pad,
+                                a_max=a_max)
+        else:
+            res, _ = simulate_grid_with_telemetry(
+                algo, p.cluster, p.rates, list(loads), n_seeds, p.cfg,
+                scenario=spec, pad=pad, a_max=a_max, telemetry=tcfg)
+        jax.block_until_ready(res.mean_completion_norm)
+    wall = time.time() - t0
+    n = k * len(loads) * n_seeds
+    return {"policy": algo, "n_scenarios": k, "scenarios": labels[:k],
+            "cells": n, "wall_s": wall, "cells_per_s": n / max(wall, 1e-9),
+            "cells_per_s_one_program": None}
+
+
+def _grid_cell_events(p, algo, labels, loads, n_seeds, tele, tcfg, sink,
+                      wall):
+    """Per-cell JSONL events: slice each (scenario, load) cell out of the
+    stacked telemetry (cell_view — seeds aggregate, cells never mix) and
+    emit a run manifest + windows + histograms per cell."""
+    for s, lbl in enumerate(labels):
+        for j, l in enumerate(loads):
+            cell = cell_view(tele, (s, slice(None), j))
+            sink.extend(to_events(
+                cell, tcfg, p.cfg.T, p.cfg.warmup,
+                run_manifest(suite="grid", scenario=lbl, algo=algo,
+                             load=float(l), seeds=n_seeds, T=p.cfg.T,
+                             warmup=p.cfg.warmup, wall_s=wall,
+                             trace_count=trace_count())))
+
+
+def _print_grid_table(out: dict):
+    """Mean +/- 95% CI per (scenario, load) cell, one block per policy."""
+    loads = out["loads"]
+    for algo in out["policies"]:
+        print(f"\n== grid sweep: {algo} ({out['preset']} preset, "
+              f"{out['seeds']} seeds) ==")
+        print(f"{'scenario':22s} " + " ".join(
+            f"{'rho=' + str(l):>17s}" for l in loads))
+        for lbl in out["scenarios"]:
+            row = out["cells"][algo][lbl]
+            parts = []
+            for l in loads:
+                c = row[str(l)]
+                ci = c["ci"]
+                ci_s = f"{ci:6.2f}" if np.isfinite(ci) else "   n/a"
+                parts.append(f"{c['mean']:8.2f} ±{ci_s}"
+                             f"{'*' if c['drift'] > 1.5 else ' '}")
+            print(f"{lbl:22s} " + " ".join(parts))
+    print("(± = 95% CI over seed replications; * = unstable cell: drift "
+          "> 1.5, expected near capacity for zipf/outage scenarios)")
+
+
 if __name__ == "__main__":
-    main()
+    if "--grid" in sys.argv[1:]:
+        grid_main()
+    else:
+        main()

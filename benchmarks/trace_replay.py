@@ -52,6 +52,7 @@ def _per_slot_tasks_per_s(preset, scn, load) -> dict:
 
 
 def main(preset=None):
+    """Replay the production-day trace; append the throughput datapoint."""
     p = preset or preset_from_argv()
     lam_cap = p.cluster.M * p.rates.alpha    # placement-free capacity edge
     n_tasks = int(round(LOAD * lam_cap * p.cfg.T))

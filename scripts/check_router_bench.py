@@ -19,6 +19,7 @@ FACTOR = 2.0
 
 
 def main(path: str) -> int:
+    """Gate the newest datapoint against the previous one (2x bar)."""
     with open(path) as f:
         data = json.load(f)
     runs = data.get("runs", [])

@@ -16,6 +16,7 @@ from repro.telemetry import read_jsonl, validate_events  # noqa: E402
 
 
 def main(argv) -> int:
+    """Validate each file; exit 0 only when all pass."""
     if not argv:
         print(__doc__)
         return 2

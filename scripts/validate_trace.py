@@ -18,6 +18,7 @@ from repro.trace import validate_log                # noqa: E402
 
 
 def check(path: str) -> bool:
+    """Load + schema-check one trace file, printing the verdict."""
     try:
         log = load_log(path)
     except Exception as e:
@@ -37,6 +38,7 @@ def check(path: str) -> bool:
 
 
 def main(paths) -> int:
+    """Check every path; exit 0 only when all pass."""
     if not paths:
         print(__doc__)
         return 1

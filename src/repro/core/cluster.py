@@ -30,9 +30,11 @@ class Rates(NamedTuple):
     gamma: float = 0.008
 
     def as_array(self) -> jnp.ndarray:
+        """[3] float32 (alpha, beta, gamma) for vectorized rate lookups."""
         return jnp.array([self.alpha, self.beta, self.gamma], dtype=jnp.float32)
 
     def mean_slots(self) -> jnp.ndarray:
+        """[3] mean service slots per locality class (1 / rate)."""
         return 1.0 / self.as_array()
 
 
@@ -53,6 +55,7 @@ class Cluster:
 
     @property
     def rack_size(self) -> int:
+        """Servers per rack (M / K; checked divisible)."""
         return self.M // self.K
 
     @property

@@ -52,6 +52,7 @@ def lex_argmin(values: jnp.ndarray, *tiebreaks: jnp.ndarray, mask: jnp.ndarray) 
 
 
 def lex_argmax(values: jnp.ndarray, *tiebreaks: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """``lex_argmin`` on negated values: masked argmax with tie lanes."""
     return lex_argmin(-values, *tiebreaks, mask=mask)
 
 
@@ -110,6 +111,7 @@ class PodSpec:
 
     @property
     def d(self) -> int:
+        """Total probe budget (rack + remote candidates)."""
         return self.d_rack + self.d_remote
 
 
@@ -240,12 +242,14 @@ def sample_remote_peer(key: jax.Array, cluster: Cluster, server: jnp.ndarray,
 
 
 def bp_candidates_per_route(cluster: Cluster, pod: Optional[PodSpec]) -> int:
+    """Servers BP(-Pod) scores per routing decision (complexity table)."""
     if pod is None:
         return cluster.M
     return cluster.n_replicas + pod.d
 
 
 def jsqmw_candidates_per_schedule(cluster: Cluster, pod: Optional[PodSpec]) -> int:
+    """Queues JSQ-MW(-Pod) scans per scheduling decision."""
     if pod is None:
         return cluster.M
     return 1 + pod.d

@@ -24,6 +24,7 @@ LOCAL, RACK, REMOTE = 0, 1, 2
 
 @dataclasses.dataclass
 class RefResult:
+    """Summary of one event-accurate reference run (oracle for tests)."""
     mean_completion_slots: float
     mean_tasks_in_system: float
     n_completed: int

@@ -104,8 +104,9 @@ from ..scenarios.build import (
     realize,
     sample_locals_scenario,
     speed_at,
+    stack_scenarios,
 )
-from ..scenarios.spec import get_scenario
+from ..scenarios.spec import get_scenario, scenario_names
 from .policies import (
     PodSpec,
     bp_candidates_per_route,
@@ -173,12 +174,16 @@ class RawSums(NamedTuple):
 
     @staticmethod
     def zero() -> "RawSums":
+        """All-zero accumulator (scan carry init)."""
         z = jnp.float32(0.0)
         return RawSums(z, z, z, z, z, z, z, jnp.zeros(3, jnp.float32),
                        jnp.zeros(3, jnp.float32), z, z, z, z)
 
 
 class SimResult(NamedTuple):
+    """Per-run summary statistics (``summarize``); under ``simulate_grid``
+    every leaf gains leading [seeds, loads] dims, under ``simulate_sweep``
+    [scenarios, seeds, loads]."""
     mean_tasks_in_system: jnp.ndarray
     mean_completion_slots: jnp.ndarray
     mean_completion_norm: jnp.ndarray   # units of mean local service time
@@ -286,6 +291,7 @@ def _task_work(key, dur, scen) -> jnp.ndarray:
 
 
 class BPState(NamedTuple):
+    """Balanced-Pandas family state: per-server 3-class sub-queues."""
     Q: jnp.ndarray          # int32 [M, 3] sub-queue lengths
     busy: jnp.ndarray       # bool  [M]
     rem: jnp.ndarray        # f32   [M] remaining service work units
@@ -293,6 +299,7 @@ class BPState(NamedTuple):
 
     @staticmethod
     def zero(M: int) -> "BPState":
+        """Empty cluster of M servers."""
         return BPState(
             jnp.zeros((M, 3), jnp.int32), jnp.zeros(M, bool),
             jnp.zeros(M, jnp.float32), jnp.zeros(M, jnp.int32),
@@ -472,6 +479,7 @@ def _bp_step(state: BPState, sums: RawSums, key, *, cluster, rates, cfg,
 
 
 class SQState(NamedTuple):
+    """JSQ family state: one scalar queue per server."""
     Q: jnp.ndarray          # int32 [M] queue lengths (tasks local to server)
     busy: jnp.ndarray
     rem: jnp.ndarray
@@ -479,6 +487,7 @@ class SQState(NamedTuple):
 
     @staticmethod
     def zero(M: int) -> "SQState":
+        """Empty cluster of M servers."""
         return SQState(jnp.zeros(M, jnp.int32), jnp.zeros(M, bool),
                        jnp.zeros(M, jnp.float32), jnp.zeros(M, jnp.int32))
 
@@ -725,6 +734,7 @@ def _sq_step(state: SQState, sums: RawSums, key, *, cluster, rates, cfg,
 
 
 class FCFSState(NamedTuple):
+    """FCFS state: a single central queue feeding all servers."""
     C: jnp.ndarray          # int32 scalar: central queue length
     busy: jnp.ndarray
     rem: jnp.ndarray
@@ -732,6 +742,7 @@ class FCFSState(NamedTuple):
 
     @staticmethod
     def zero(M: int) -> "FCFSState":
+        """Empty cluster of M servers."""
         return FCFSState(jnp.zeros((), jnp.int32), jnp.zeros(M, bool),
                          jnp.zeros(M, jnp.float32), jnp.zeros(M, jnp.int32))
 
@@ -843,6 +854,7 @@ def trace_count() -> int:
 
 
 def reset_trace_count() -> None:
+    """Zero the ``_run`` retrace counter (test isolation helper)."""
     _TRACE_COUNTS["_run"] = 0
 
 
@@ -1032,8 +1044,134 @@ def simulate_grid_with_telemetry(
     return summarize(sums, algo, cluster, rates, pod), tele
 
 
+# ---------------------------------------------------------------------------
+# Batched mega-sweep: ONE compiled program per policy for the whole
+# scenario x load x seed grid
+# ---------------------------------------------------------------------------
+
+
+def sweep_grid(cluster: Cluster, rates: Rates, cfg: SimConfig, loads,
+               scenarios=None, pad=None, a_max: Optional[int] = None):
+    """Host-side grid construction for ``simulate_sweep``.
+
+    Realizes + stacks the scenarios (``scenarios.build.stack_scenarios``)
+    and resolves the grid's shared arrival-buffer width.  Returns
+    ``(names, stacked ScenarioData with leading [S], lam [S, L] float32
+    absolute arrival rates, a_max)``.  ``scenarios`` is an iterable of
+    registered names and/or Scenario objects (default: the full registry);
+    ``a_max`` defaults to the maximum ``resolve_a_max`` over every
+    (scenario, load) cell, sized from each scenario's peak slot intensity
+    — one static width for the whole grid, so the grid shares one
+    compiled signature.
+    """
+    import numpy as _np
+    names = list(scenarios) if scenarios is not None \
+        else list(scenario_names())
+    stacked, caps = stack_scenarios(names, cluster, rates, cfg.T, pad=pad)
+    loads = [float(l) for l in loads]
+    lam = _np.asarray(caps)[:, None] * _np.asarray(loads)[None, :]
+    if a_max is None:
+        peaks = _np.max(_np.asarray(stacked.lam_shape), axis=1)
+        a_max = max(cfg.resolve_a_max(float(c) * max(loads), float(p))
+                    for c, p in zip(caps, peaks))
+    labels = [getattr(n, "name", n) for n in names]
+    return labels, stacked, jnp.asarray(lam, jnp.float32), int(a_max)
+
+
+def _sweep_cells(keys, lam, scen, *, algo, cluster, rates, cfg, pod, a_max,
+                 tcfg):
+    """vmap the jit'd ``_run`` over the stacked grid.
+
+    keys: [K] PRNG keys (one per Monte-Carlo seed, shared across cells the
+    way ``simulate_grid`` shares them across loads); lam: [S, L]; scen:
+    ScenarioData with leading [S].  Returns (sums, tele) with leading
+    [S, K, L] on every leaf.  The jit boundary stays on ``_run``, so the
+    whole grid lowers to ONE batched executable per policy signature and
+    ``trace_count`` advances by exactly 1.
+    """
+    def one(key, l, sc):
+        return _run(key, l, sc, algo=algo, cluster=cluster, rates=rates,
+                    cfg=cfg, pod=pod, a_max=a_max, homo_rates=False,
+                    tcfg=tcfg)
+
+    def per_scen(lam_row, sc):
+        def per_seed(k):
+            return jax.vmap(lambda l: one(k, l, sc))(lam_row)
+        return jax.vmap(per_seed)(keys)
+
+    return jax.vmap(per_scen)(lam, scen)
+
+
+def simulate_sweep(algo: str, cluster: Cluster, rates: Rates, loads,
+                   n_seeds: int, cfg: SimConfig = SimConfig(),
+                   pod: Optional[PodSpec] = None, seed0: int = 0,
+                   scenarios=None, pad=None, a_max: Optional[int] = None,
+                   telemetry=None, devices=None):
+    """The whole scenario x load x seed grid as ONE program per policy.
+
+    Stacks canonically-padded scenario pytrees along a leading axis
+    (``scenarios.build.stack_scenarios``), vmaps the jit'd simulator over
+    scenario x seed x load, and — when more than one device is visible —
+    shard_maps the scenario axis across devices (single-device hosts, e.g.
+    CPU CI, fall back to the plain vmap; pass ``devices`` to restrict the
+    mesh).  The policy (``algo``, ``pod``) is a static branch: each policy
+    is its own compiled program, and ``trace_count`` advances by exactly 1
+    per policy for the entire grid (tests/test_sweep.py guards this).
+
+    Per-cell PRNG: seed k of every (scenario, load) cell uses key
+    ``jax.random.split(PRNGKey(seed0), n_seeds)[k]`` — exactly the keys
+    ``simulate_grid`` uses, so each cell of the one-program sweep is
+    BIT-IDENTICAL to the corresponding looped ``simulate_grid`` cell
+    (also guarded by tests/test_sweep.py).
+
+    Returns ``(names, SimResult, telemetry)`` where every SimResult leaf
+    carries leading dims ``[n_scenarios, n_seeds, n_loads]`` and
+    ``telemetry`` is None unless a TelemetryConfig is passed (then its
+    leaves carry the same leading dims; reduce per cell with
+    ``repro.telemetry.export.cell_view`` — never aggregate across cells).
+    """
+    import numpy as _np
+    names, scen, lam, a_max = sweep_grid(cluster, rates, cfg, loads,
+                                         scenarios=scenarios, pad=pad,
+                                         a_max=a_max)
+    pod = _pod_for(algo, pod)
+    keys = jax.random.split(jax.random.PRNGKey(seed0), n_seeds)
+    kw = dict(algo=algo, cluster=cluster, rates=rates, cfg=cfg, pod=pod,
+              a_max=a_max, tcfg=telemetry)
+
+    devs = list(devices) if devices is not None else jax.devices()
+    S = lam.shape[0]
+    D = min(len(devs), S)
+    if D > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        pad_s = (-S) % D
+        if pad_s:
+            # repeat trailing scenarios so the scenario axis divides the
+            # mesh evenly; the duplicate rows are dropped below
+            rep = lambda x: jnp.concatenate([x, x[-pad_s:]], axis=0)
+            scen = jax.tree_util.tree_map(rep, scen)
+            lam = rep(lam)
+        mesh = Mesh(_np.asarray(devs[:D]), ("scen",))
+        fn = shard_map(
+            lambda k, l, sc: _sweep_cells(k, l, sc, **kw), mesh=mesh,
+            in_specs=(P(), P("scen"), P("scen")), out_specs=P("scen"),
+            check_rep=False)
+        sums, tele = fn(keys, lam, scen)
+        if pad_s:
+            drop = lambda x: x[:S]
+            sums = jax.tree_util.tree_map(drop, sums)
+            tele = jax.tree_util.tree_map(drop, tele)
+    else:
+        sums, tele = _sweep_cells(keys, lam, scen, **kw)
+    return names, summarize(sums, algo, cluster, rates, pod), tele
+
+
 def summarize(s: RawSums, algo: str, cluster: Cluster, rates: Rates,
               pod: Optional[PodSpec]) -> SimResult:
+    """Reduce raw scan sums to a ``SimResult`` (Little's-law mean delay,
+    locality fractions, drift, clip fraction, probe complexity)."""
     slots = jnp.maximum(s.slots, 1.0)
     mean_N = s.sum_N / slots
     lam_hat = s.arrivals / slots

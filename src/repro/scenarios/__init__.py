@@ -102,6 +102,7 @@ from .build import (
     sample_locals_scenario,
     speed_at,
     speed_trace,
+    stack_scenarios,
     traffic_shape,
 )
 

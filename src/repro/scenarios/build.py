@@ -1,4 +1,33 @@
-"""Realize a Scenario spec into arrays the jit'd simulator scans over."""
+"""Realize a Scenario spec into arrays the jit'd simulator scans over.
+
+Contract
+--------
+``realize(scenario, cluster, rates, T, pad=None)`` turns a declarative
+:class:`~repro.scenarios.spec.Scenario` into a :class:`ScenarioData`
+pytree of concrete arrays (shapes documented on the class) plus the
+scenario's capacity-region edge ``lam_cap`` (tasks/slot at load 1).
+Realization is deterministic in ``scenario.seed`` and host-side only —
+nothing here runs under jit; the simulator scans over the returned
+arrays.
+
+Single-compile invariants
+-------------------------
+Two knobs keep a whole sweep on ONE compiled simulator signature:
+
+* ``pad`` (:class:`ScenarioPad`, usually :func:`canonical_pad`): pads
+  window/catalog/epoch arrays to registry-wide maxima and switches the
+  placement law to data-selection (``placement_on``), so every scenario
+  shares one pytree structure and one set of leaf shapes.
+* ``canonical_a_max``: one arrival-buffer width (a static jit argument)
+  sized from the PEAK slot intensity over the whole sweep.
+
+``stack_scenarios`` builds on both: it realizes many scenarios against
+one pad and stacks them along a leading ``[S]`` axis — the input the
+batched sweep engine (``core.simulate_sweep``) vmaps and shard_maps over.
+
+All float arrays are float32 (except host-side capacity integration,
+float64); index arrays are int32.
+"""
 from __future__ import annotations
 
 import math
@@ -74,6 +103,7 @@ class ScenarioData(NamedTuple):
 
     @property
     def M(self) -> int:
+        """Number of servers this realization was built for."""
         return self.base_speed.shape[0]
 
 
@@ -370,6 +400,54 @@ def sample_locals_scenario(key: jax.Array, cluster: "Cluster",
 
 
 # ---------------------------------------------------------------------------
+# Scenario stacking (the batched mega-sweep's input)
+# ---------------------------------------------------------------------------
+
+
+def stack_scenarios(scenarios, cluster: "Cluster", rates: "Rates", T: int,
+                    pad: Optional[ScenarioPad] = None):
+    """Realize every scenario against ONE canonical pad and stack the
+    resulting pytrees along a new leading axis.
+
+    Returns ``(stacked, lam_caps)`` where ``stacked`` is a ScenarioData
+    whose every leaf carries a leading ``[S]`` scenario axis and
+    ``lam_caps`` is a float64 ``[S]`` array of capacity-region edges
+    (tasks/slot at load 1) in the same order.  This is the input contract
+    of ``core.simulate_sweep``: because all S realizations share one
+    canonical signature (same ScenarioPad, hence identical leaf shapes and
+    pytree structure), the whole stack can be vmapped over — and
+    shard_mapped across devices — by a single compiled program.
+
+    ``scenarios`` is an iterable of registered names and/or Scenario
+    objects; ``pad`` defaults to the registry-wide ``canonical_pad`` so a
+    stacked sweep shares its compiled signature with per-scenario
+    canonical runs.  Raises if a realization escapes the shared structure
+    (e.g. an ad-hoc composition exceeding the pad's window headroom).
+    """
+    if pad is None:
+        pad = canonical_pad(cluster)
+    scens, caps = [], []
+    for s in scenarios:
+        scen, cap = realize(get_scenario(s), cluster, rates, T, pad=pad)
+        scens.append(scen)
+        caps.append(cap)
+    if not scens:
+        raise ValueError("stack_scenarios: empty scenario list")
+    ref = jax.tree_util.tree_structure(scens[0])
+    shapes = [l.shape for l in jax.tree_util.tree_leaves(scens[0])]
+    for s, scen in zip(scenarios, scens[1:]):
+        st = jax.tree_util.tree_structure(scen)
+        sh = [l.shape for l in jax.tree_util.tree_leaves(scen)]
+        if st != ref or sh != shapes:
+            raise ValueError(
+                f"stack_scenarios: scenario {getattr(s, 'name', s)!r} does "
+                f"not realize to the shared canonical signature {pad} — "
+                "widen the pad (see canonical_pad / registry_limits)")
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *scens)
+    return stacked, np.asarray(caps, np.float64)
+
+
+# ---------------------------------------------------------------------------
 # Entry point
 # ---------------------------------------------------------------------------
 
@@ -451,7 +529,12 @@ def realize(scenario: Scenario, cluster: "Cluster", rates: "Rates",
     placement_on = None
     if pad is not None:
         E = wstart.shape[0]
-        assert E <= pad.n_windows, (E, pad.n_windows)
+        if E > pad.n_windows:
+            raise ValueError(
+                f"scenario {scenario.name!r} has {E} event windows but the "
+                f"pad reserves only {pad.n_windows}; widen the pad "
+                f"(canonical_pad sizes it over the registry, or "
+                f"pad._replace(n_windows=...))")
         wstart = np.pad(wstart, (0, pad.n_windows - E))
         wend = np.pad(wend, (0, pad.n_windows - E))      # start == end: inert
         wmult = np.pad(wmult, ((0, pad.n_windows - E), (0, 0), (0, 0)),

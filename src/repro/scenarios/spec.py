@@ -86,12 +86,14 @@ class FleetSpec:
     slow: tuple = ()                       # extra (frac, mult) cohorts
 
     def cohorts(self) -> tuple:
+        """All (fraction, multiplier) slow-cohort pairs, head field first."""
         head = (((self.slow_frac, self.slow_mult),)
                 if self.slow_frac > 0.0 and self.slow_mult != 1.0 else ())
         return head + tuple(self.slow)
 
     @property
     def uniform(self) -> bool:
+        """True when the fleet is the paper's homogeneous baseline."""
         return (not self.rack_speeds and not self.windows
                 and not self.cohorts())
 
@@ -128,6 +130,7 @@ class TrafficSpec:
         return () if self.kind == "stationary" else (self,)
 
     def merge(self, other) -> "Traffic":
+        """Compose with another traffic shape (pointwise product)."""
         return _traffic_from_parts(self.parts + other.parts)
 
 
@@ -145,9 +148,11 @@ class TrafficProduct:
 
     @property
     def parts(self) -> tuple:
+        """The non-trivial factors (already each non-stationary)."""
         return tuple(self.factors)
 
     def merge(self, other) -> "Traffic":
+        """Compose with another traffic shape (factor union)."""
         return _traffic_from_parts(self.parts + other.parts)
 
 
@@ -198,14 +203,18 @@ class SizeSpec:
 
     @property
     def trivial(self) -> bool:
+        """True for unit-size tasks (no size randomness)."""
         return self.sigma == 0.0
 
     def merge(self, other: "SizeSpec") -> "SizeSpec":
+        """Compose lognormal spreads (variances add in log space)."""
         return SizeSpec(sigma=math.sqrt(self.sigma ** 2 + other.sigma ** 2))
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
+    """A named bundle of one value per axis (fleet / traffic / placement /
+    sizes) — declarative; ``build.realize`` turns it into arrays."""
     name: str
     fleet: FleetSpec = FleetSpec()
     traffic: Traffic = TrafficSpec(kind="stationary")
@@ -219,6 +228,7 @@ SCENARIOS: dict[str, Scenario] = {}
 
 
 def register(s: Scenario) -> Scenario:
+    """Add a scenario to the global registry (name must be new)."""
     if s.name in SCENARIOS:
         raise ValueError(f"scenario {s.name!r} already registered")
     SCENARIOS[s.name] = s
@@ -226,6 +236,7 @@ def register(s: Scenario) -> Scenario:
 
 
 def scenario_names() -> tuple[str, ...]:
+    """Registered scenario names, in registration order."""
     return tuple(SCENARIOS)
 
 
@@ -300,6 +311,7 @@ def registry_limits(scenarios=None) -> tuple[int, int, int]:
 
 
 def get_scenario(s: Union[str, Scenario, None]) -> Scenario:
+    """Resolve a name / Scenario / None (-> uniform baseline) to a Scenario."""
     if s is None:
         return SCENARIOS["uniform"]
     if isinstance(s, Scenario):

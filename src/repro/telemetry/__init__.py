@@ -74,6 +74,7 @@ from .collectors import (
 from .export import (
     SCHEMA_VERSION,
     aggregate,
+    cell_view,
     format_clip_warning,
     probe_summary,
     read_jsonl,

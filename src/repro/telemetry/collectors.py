@@ -67,6 +67,7 @@ class TelemetryConfig:
     ring_cap: int = 128          # FIFO arrival-slot records per queue
 
     def window_len(self, T: int) -> int:
+        """Slots per window: ceil(T / n_windows); last window ragged."""
         return max(1, -(-T // self.n_windows))
 
 

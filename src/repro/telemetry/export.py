@@ -38,9 +38,33 @@ _S = {n: i for i, n in enumerate(WINDOW_SUMS)}
 _X = {n: i for i, n in enumerate(WINDOW_MAXES)}
 
 
+def cell_view(tele: Telemetry, idx) -> Telemetry:
+    """Index one grid cell (or a cell slab) out of batched telemetry.
+
+    ``simulate_grid`` / ``simulate_sweep`` telemetry carries leading batch
+    axes on every leaf ([seeds, loads] resp. [scenarios, seeds, loads]);
+    ``idx`` is any numpy index into those axes — e.g. ``(s, slice(None),
+    l)`` for one sweep cell's seed replications.  The mega-sweep contract
+    is that collectors reduce PER CELL: always slice the cell first with
+    this and aggregate the remainder, never ``aggregate`` across cells of
+    different scenarios/loads (their windows would sum into one
+    meaningless series).  Rings are per-run state and are dropped.
+    """
+    f = lambda x: None if x is None else np.asarray(x)[idx]  # noqa: E731
+    return Telemetry(
+        win=f(tele.win), win_max=f(tele.win_max),
+        qlen_hist=f(tele.qlen_hist), work_hist=f(tele.work_hist),
+        sojourn_hist=f(tele.sojourn_hist),
+        sojourn_dropped=f(tele.sojourn_dropped),
+    )
+
+
 def aggregate(tele: Telemetry) -> Telemetry:
     """Reduce vmapped (``simulate_grid``) telemetry over its leading batch
-    axes: counts/sums add, maxima max, rings are dropped (per-run state)."""
+    axes: counts/sums add, maxima max, rings are dropped (per-run state).
+    For ``simulate_sweep`` telemetry, slice a single (scenario, load) cell
+    with ``cell_view`` FIRST — aggregating across heterogeneous cells mixes
+    their window series into something meaningless."""
     win = np.asarray(tele.win, np.float64)
     extra = win.ndim - 2
     if extra == 0:
@@ -105,6 +129,8 @@ def probe_summary(tele: Telemetry) -> dict:
 
 def sojourn_percentiles(tele: Telemetry, tcfg: TelemetryConfig,
                         ps=(50, 95, 99)) -> dict:
+    """Per-task sojourn p50/p95/p99 (slots) from the run's log-spaced
+    histogram, plus sample count and dropped-record count."""
     tele = aggregate(tele)
     hist = np.asarray(tele.sojourn_hist, np.float64)
     vals = percentiles(hist, ps, tcfg.bins_per_octave)
@@ -190,6 +216,8 @@ def to_events(tele: Telemetry, tcfg: TelemetryConfig, T: int, warmup: int,
 
 
 def write_jsonl(path: str, events: list, append: bool = True) -> None:
+    """Write events (one JSON object per line) to ``path``, creating parent
+    directories; ``append=False`` truncates an existing file."""
     parent = os.path.dirname(os.path.abspath(path))
     if parent:
         os.makedirs(parent, exist_ok=True)
@@ -199,6 +227,8 @@ def write_jsonl(path: str, events: list, append: bool = True) -> None:
 
 
 def read_jsonl(path: str) -> list:
+    """Load a JSONL event stream back into a list of dicts (blank lines
+    skipped) — the inverse of ``write_jsonl``."""
     with open(path) as f:
         return [json.loads(line) for line in f if line.strip()]
 

@@ -56,9 +56,11 @@ class TraceTraffic:
 
     @property
     def parts(self) -> tuple:
+        """A recorded trace is always a non-trivial traffic factor."""
         return (self,)
 
     def merge(self, other):
+        """Compose with another traffic shape (pointwise product)."""
         return _traffic_from_parts(self.parts + other.parts)
 
     def realize_shape(self, T: int, rng) -> np.ndarray:
@@ -187,6 +189,7 @@ class TracePlacement:
             else self
 
     def budget(self, M: int) -> int:
+        """Catalog-row budget for an M-server cluster."""
         return self.chunks_per_server * M
 
     @property

@@ -48,10 +48,12 @@ class ArrivalLog:
 
     @property
     def n_tasks(self) -> int:
+        """Number of recorded arrivals."""
         return int(self.t.shape[0])
 
     @property
     def n_epochs(self) -> int:
+        """Placement-churn epochs (boundaries + 1)."""
         return len(self.churn_t) + 1
 
     def epoch_bounds(self) -> np.ndarray:
@@ -108,6 +110,7 @@ def validate_log(log: ArrivalLog) -> list:
 
 
 def ensure_valid(log: ArrivalLog) -> ArrivalLog:
+    """Pass the log through, raising ValueError listing schema errors."""
     errs = validate_log(log)
     if errs:
         raise ValueError("invalid arrival log: " + "; ".join(errs))
@@ -128,6 +131,7 @@ def _header(log: ArrivalLog) -> dict:
 
 
 def write_jsonl(log: ArrivalLog, path) -> None:
+    """Write the JSONL encoding: header object, then one task per line."""
     with open(path, "w") as f:
         f.write(json.dumps(_header(log)) + "\n")
         tenant = log.tenant
@@ -140,6 +144,7 @@ def write_jsonl(log: ArrivalLog, path) -> None:
 
 
 def read_jsonl(path) -> ArrivalLog:
+    """Read the JSONL encoding back (exact round-trip of write_jsonl)."""
     with open(path) as f:
         head = json.loads(next(f))
         t, chunk, size, tenant = [], [], [], []
@@ -170,6 +175,7 @@ def read_jsonl(path) -> ArrivalLog:
 
 
 def write_npz(log: ArrivalLog, path) -> None:
+    """Write the packed-npz encoding (same columns as JSONL)."""
     cols = dict(t=log.t.astype(np.float64),
                 chunk=log.chunk.astype(np.int64),
                 size=log.size.astype(np.float32),
@@ -183,6 +189,7 @@ def write_npz(log: ArrivalLog, path) -> None:
 
 
 def read_npz(path) -> ArrivalLog:
+    """Read the packed-npz encoding back (exact round-trip)."""
     with np.load(path, allow_pickle=False) as z:
         return ArrivalLog(
             name=str(z["name"]),

@@ -71,6 +71,7 @@ def replay_trace_count() -> int:
 
 
 def reset_replay_trace_count() -> None:
+    """Zero the replay-chunk retrace counter (test isolation helper)."""
     _REPLAY_TRACE_COUNTS["chunk"] = 0
 
 
@@ -82,6 +83,7 @@ class _SizeLaw(NamedTuple):
 
 
 class ReplayResult(NamedTuple):
+    """One replay run: summary stats + sustained routing throughput."""
     result: SimResult               # summarize() over the replayed run
     sums: RawSums
     telemetry: Optional[object]     # Telemetry pytree (None if off)

@@ -1,0 +1,58 @@
+"""Benchmark CLI drift guard: ``benchmarks.run --help`` must exit 0 and
+name every registered suite and documented flag — the README quickstart
+and CI invocations are written against this surface."""
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run_help():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), env.get("PYTHONPATH", "")])
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--help"],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=300)
+
+
+def test_help_exits_zero_and_names_every_suite():
+    proc = _run_help()
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    # the registry is the source of truth — import it rather than
+    # hard-coding the list here, so adding a suite can't silently skip
+    # this guard
+    sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    try:
+        import run as run_mod
+    finally:
+        sys.path.pop(0)
+        sys.path.pop(0)
+    assert len(run_mod.SUITES) >= 10
+    for name, _, _ in run_mod.SUITES:
+        assert re.search(rf"^\s+{re.escape(name)}\s", proc.stdout,
+                         re.MULTILINE), f"--help does not list {name}"
+    for flag, _ in run_mod.FLAGS:
+        bare = flag.split("=")[0]
+        assert bare in proc.stdout, f"--help does not document {bare}"
+
+
+def test_unknown_suite_mentions_help():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), env.get("PYTHONPATH", "")])
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only=nope"],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=300)
+    assert proc.returncode != 0
+    assert "nope" in proc.stderr
+
+
+def test_check_docs_passes():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "check_docs.py")],
+        capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout[-3000:]
