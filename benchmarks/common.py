@@ -138,6 +138,25 @@ def run_figure(preset: Preset, loads, service_dist: str, name: str,
     return out
 
 
+def auto_warmup_fields(tele, tcfg, T: int, warmup: int, policy=None):
+    """Run the drift-aware auto-extend warmup loop on collected telemetry
+    and return ``(WarmupReport, row_fields)`` for benchmark rows / JSONL
+    manifests (warmup_realized, warmup_converged, post-extension drift...).
+
+    Pure post-processing on window sums — the run is NOT repeated and a
+    fast-mixing cell (drift already below threshold) records zero
+    extensions.  A NaN drift comes back converged=False with a loud
+    ``warmup_note`` (unmeasurable is never "converged").  Prints the note,
+    once per offending cell, so table readers see it without opening the
+    manifest."""
+    from repro.telemetry import auto_extend_warmup
+    report = auto_extend_warmup(tele, tcfg, T, warmup, policy=policy)\
+        if policy is not None else auto_extend_warmup(tele, tcfg, T, warmup)
+    if report.note:
+        print(f"  [auto-warmup] {report.note}")
+    return report, report.fields()
+
+
 def save_artifact(name: str, obj: dict):
     """Dump one benchmark's result dict to ``artifacts/bench/<name>.json``."""
     os.makedirs(ART, exist_ok=True)
@@ -146,8 +165,9 @@ def save_artifact(name: str, obj: dict):
 
 
 # two-sided 95% Student-t critical values by degrees of freedom (1..30;
-# larger samples use the normal 1.96) — table instead of scipy, which the
-# container does not ship
+# larger samples use the normal 1.96) — a table so the CI columns never
+# depend on scipy (optional at runtime: the fluid-LP capacity edge uses
+# it when present and falls back to the closed form when not)
 _T95 = (12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262,
         2.228, 2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101,
         2.093, 2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052,
@@ -248,6 +268,10 @@ def print_table(out: dict):
     for algo, row in out["algos"].items():
         cells = []
         for m, d in zip(row["mean"], row["drift"]):
-            cells.append(f"{m:8.2f}{'*' if d > 1.5 else ' '}")
+            # NaN drift = UNMEASURABLE, flagged '!' — never shown as a
+            # clean (converged) cell
+            mark = "!" if d != d else ("*" if d > 1.5 else " ")
+            cells.append(f"{m:8.2f}{mark}")
         print(f"{ALGO_LABELS[algo]:28s} " + " ".join(cells))
-    print("(* = unstable: tasks-in-system still growing at end of run)")
+    print("(* = unstable: tasks-in-system still growing at end of run; "
+          "! = drift unmeasurable — treat as NOT converged)")

@@ -39,16 +39,15 @@ import time
 
 import numpy as np
 
-from common import (Preset, append_trajectory, mean_ci, preset_from_argv,
-                    save_artifact)
+from common import (Preset, append_trajectory, auto_warmup_fields, mean_ci,
+                    preset_from_argv, save_artifact)
 
 from repro.core import (PodSpec, simulate_grid, simulate_grid_with_telemetry,
                         simulate_sweep, sweep_grid, trace_count)
 from repro.scenarios import SCENARIOS, canonical_a_max, canonical_pad, compose
 from repro.telemetry import (TelemetryConfig, cell_view, format_clip_warning,
                              probe_summary, run_manifest,
-                             sojourn_percentiles, to_events, windowed_drift,
-                             write_jsonl)
+                             sojourn_percentiles, to_events, write_jsonl)
 
 BENCH_SWEEP_PATH = os.path.join(os.path.dirname(__file__), "..",
                                 "BENCH_sweep.json")
@@ -95,7 +94,13 @@ def _mean_T(preset: Preset, algo: str, scenario, pod=None,
     }
     if tele is not None:
         cfg = preset.cfg
-        row["drift_windowed"] = windowed_drift(tele, tcfg, cfg.T, cfg.warmup)
+        # drift-aware auto-extend warmup: push the measurement boundary
+        # forward over the collected windows until the tail's drift drops
+        # below threshold (pure post-processing — the run is not repeated);
+        # rows and manifests record the REALIZED warmup and verdict, and a
+        # NaN drift is carried as "unmeasured", never as converged
+        _, wfields = auto_warmup_fields(tele, tcfg, cfg.T, cfg.warmup)
+        row.update(wfields)
         row["sojourn"] = sojourn_percentiles(tele, tcfg)
         if "note" in row["sojourn"]:
             print(f"[scenarios] NOTE {label}/{algo}: "
@@ -107,7 +112,7 @@ def _mean_T(preset: Preset, algo: str, scenario, pod=None,
                 d=(pod.d if pod is not None else None),
                 load=preset.fixed_load, seeds=preset.n_seeds, T=cfg.T,
                 warmup=cfg.warmup, wall_s=time.time() - t0,
-                trace_count=trace_count())))
+                trace_count=trace_count(), **wfields)))
     return row
 
 
@@ -139,8 +144,9 @@ def main(preset=None):
     pad = canonical_pad(p.cluster)
     extra = [s for n, s in selected.items() if n not in SCENARIOS]
     # a 3+-way ad-hoc composition can union more windows than the pairwise
-    # headroom reserves; widen only then (the run leaves the registry's
-    # shared signature, but still compiles once for its own selection)
+    # (COMPOSE_DEPTH=2) headroom reserves; widen only then (the run leaves
+    # the registry's shared signature, but still compiles once for its own
+    # selection) — the library spelling is canonical_pad(compose_depth=N)
     need = max((len(s.fleet.windows) for s in extra), default=0)
     if need > pad.n_windows:
         pad = pad._replace(n_windows=need)
@@ -213,19 +219,28 @@ def _print_table(out: dict):
     for name, row in out["scenarios"].items():
         a = row["algos"]
         def cell(r):
-            # prefer the windowed (telemetry-ring) drift when collected
+            # prefer the windowed (telemetry-ring, post-auto-extend) drift
+            # when collected; a NaN drift is UNMEASURABLE and flagged '!'
+            # — never silently shown as a clean, converged cell (the old
+            # fallthrough to r['drift'] hid exactly that)
             d = r.get("drift_windowed")
-            d = r["drift"] if d is None or d != d else d
+            if d is None:
+                d = r["drift"]
+            if d != d:
+                return f"{r['mean']:8.2f}!"
             return f"{r['mean']:8.2f}{'*' if d > 1.5 else ' '}"
         print(f"{name:16s} {cell(a['balanced_pandas'])} "
               f"{cell(a['balanced_pandas_pod'])} "
               f"{cell(a['jsq_maxweight_pod']):>11s} "
               f"{row['sensitivity_d']:+7.1%}  "
               f"{a['balanced_pandas_pod']['local_frac']:12.1%}")
-    print("(* = unstable: tasks-in-system still growing at end of run; "
-          "expected for outage/flash transients at high load, and for "
-          "zipf scenarios near capacity — the load calibration is "
-          "placement-oblivious, see repro.scenarios docstring)")
+    print("(* = unstable: tasks-in-system still growing after the "
+          "(auto-extended) warmup; ! = drift unmeasurable — treat as NOT "
+          "converged.  Load calibration is placement-AWARE: lam_cap is the "
+          "fluid-LP optimum, so zipf/adversarial cells at load < 1 are "
+          "genuinely subcritical — see repro.scenarios docstring.  BENCH "
+          "rows recorded before the LP landed used the optimistic closed "
+          "form for skewed placements and ran at a higher true load.)")
 
 
 # ---------------------------------------------------------------------------
@@ -427,11 +442,13 @@ def _print_grid_table(out: dict):
                 c = row[str(l)]
                 ci = c["ci"]
                 ci_s = f"{ci:6.2f}" if np.isfinite(ci) else "   n/a"
-                parts.append(f"{c['mean']:8.2f} ±{ci_s}"
-                             f"{'*' if c['drift'] > 1.5 else ' '}")
+                d = c["drift"]
+                mark = "!" if d != d else ("*" if d > 1.5 else " ")
+                parts.append(f"{c['mean']:8.2f} ±{ci_s}{mark}")
             print(f"{lbl:22s} " + " ".join(parts))
     print("(± = 95% CI over seed replications; * = unstable cell: drift "
-          "> 1.5, expected near capacity for zipf/outage scenarios)")
+          "> 1.5, expected near capacity for outage scenarios; ! = drift "
+          "unmeasurable, treat as NOT converged)")
 
 
 if __name__ == "__main__":

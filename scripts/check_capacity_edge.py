@@ -1,0 +1,159 @@
+"""Capacity-edge smoke check: the fluid LP + auto-extend warmup, CI-sized.
+
+Usage: PYTHONPATH=src python scripts/check_capacity_edge.py [--out=DIR]
+
+Runs in a couple of minutes on CPU and fails loudly (exit 1) when any of
+the honest-capacity invariants breaks:
+
+1. dispatch   — every uniform-placement registry scenario keeps the
+   closed-form lam_cap BIT-FOR-BIT, padded == raw for all scenarios;
+2. honesty    — every skewed-placement scenario's LP edge is strictly
+   below the fleet-only closed form;
+3. exactness  — the LP reproduces the hand-computable edge of a
+   single-hot-triple catalog (3*alpha + (M-R)*gamma) to 1e-9;
+4. auto-extend — a slow-mixing high-load run starts with windowed drift
+   >= threshold and converges below it after extension; a fast-mixing run
+   records zero extensions; an unmeasurable (NaN) drift reports NOT
+   converged.
+
+Writes ``capacity_edges.json`` (per-scenario LP vs closed-form table) and
+``warmup_report.json`` to --out (default artifacts/capacity) for the CI
+artifact upload.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    Cluster,
+    Rates,
+    SimConfig,
+    simulate_auto_warmup,
+)
+from repro.scenarios import SCENARIOS, canonical_pad, realize  # noqa: E402
+from repro.scenarios.build import ScenarioData  # noqa: E402
+from repro.scenarios.capacity import (  # noqa: E402
+    HAVE_SCIPY,
+    fluid_edge,
+    uniform_edge,
+)
+from repro.telemetry import TelemetryConfig, auto_extend_warmup  # noqa: E402
+
+CLUSTER = Cluster(M=24, K=4)
+RATES = Rates(0.05, 0.025, 0.01)
+T = 2000
+
+
+def check_registry(failures: list) -> dict:
+    """LP vs closed form over the whole registry; returns the table."""
+    pad = canonical_pad(CLUSTER)
+    table = {}
+    for name, spec in SCENARIOS.items():
+        scen, cap = realize(spec, CLUSTER, RATES, T)
+        closed = uniform_edge(scen, RATES, T)
+        _, cap_p = realize(spec, CLUSTER, RATES, T, pad=pad)
+        skewed = spec.placement.kind != "uniform"
+        table[name] = {"lam_cap": cap, "closed_form": closed,
+                       "ratio": cap / max(closed, 1e-12), "skewed": skewed}
+        if abs(cap_p - cap) > 1e-9 * max(cap, 1.0):
+            failures.append(f"{name}: padded {cap_p} != raw {cap}")
+        if not skewed and cap != closed:
+            failures.append(f"{name}: uniform placement but lam_cap {cap} "
+                            f"!= closed form {closed} (must be bit-for-bit)")
+        if skewed and not cap < closed:
+            failures.append(f"{name}: skewed placement but LP edge {cap} "
+                            f"not strictly below closed form {closed}")
+        print(f"[capacity] {name:22s} lam_cap {cap:8.4f}  "
+              f"closed {closed:8.4f}  ratio {cap / max(closed, 1e-12):.4f}"
+              f"{'  (skewed)' if skewed else ''}", flush=True)
+    return table
+
+
+def check_exactness(failures: list):
+    """Single-hot-triple catalog: LP == 3a + (M-R)g, hand-computable."""
+    cl = Cluster(M=6, K=2)
+    scen = ScenarioData(
+        lam_shape=jnp.ones(T, jnp.float32),
+        base_speed=jnp.ones(6, jnp.float32),
+        win_start=jnp.zeros(0, jnp.int32),
+        win_end=jnp.zeros(0, jnp.int32),
+        win_mult=jnp.ones((0, 6, 3), jnp.float32),
+        chunk_logits=jnp.zeros(1, jnp.float32),
+        chunk_locals=jnp.asarray([[0, 1, 2]], jnp.int32),
+    )
+    want = 3 * RATES.alpha + 3 * RATES.gamma
+    got = fluid_edge(scen, cl, RATES, T)
+    print(f"[capacity] single-triple edge: LP {got:.6f} vs hand {want:.6f}",
+          flush=True)
+    if abs(got - want) > 1e-9:
+        failures.append(f"single-triple LP {got} != hand-computed {want}")
+
+
+def check_auto_extend(failures: list) -> dict:
+    """Slow-mixing run extends and converges; fast-mixing never extends."""
+    cl = Cluster(M=12, K=3)
+    tcfg = TelemetryConfig()
+    _, _, slow = simulate_auto_warmup(
+        "balanced_pandas", cl, RATES, 0.93, jax.random.PRNGKey(1),
+        cfg=SimConfig(T=6000, warmup=0), telemetry=tcfg)
+    print(f"[auto-warmup] slow-mixing: drift {slow.drift0:.3f} -> "
+          f"{slow.drift:.3f}, warmup 0 -> {slow.warmup} "
+          f"({slow.extensions} extensions, converged={slow.converged})",
+          flush=True)
+    if not (slow.drift0 >= 1.05 and slow.extensions >= 1 and slow.converged
+            and slow.drift < 1.05):
+        failures.append(f"slow-mixing auto-extend misbehaved: {slow}")
+    _, tele, fast = simulate_auto_warmup(
+        "balanced_pandas", cl, RATES, 0.6, jax.random.PRNGKey(1),
+        cfg=SimConfig(T=6000, warmup=1500), telemetry=tcfg)
+    print(f"[auto-warmup] fast-mixing: drift {fast.drift:.3f}, "
+          f"{fast.extensions} extensions, converged={fast.converged}",
+          flush=True)
+    if not (fast.extensions == 0 and fast.converged):
+        failures.append(f"fast-mixing run extended or failed: {fast}")
+    nan_rep = auto_extend_warmup(tele, tcfg, 6000, 6000)
+    if nan_rep.converged or "UNMEASURABLE" not in nan_rep.note:
+        failures.append(f"NaN drift not handled loudly: {nan_rep}")
+    return {"slow_mixing": slow.fields(), "fast_mixing": fast.fields(),
+            "nan_drift": nan_rep.fields()}
+
+
+def main() -> int:
+    """Run all checks; exit 0 only when every invariant holds."""
+    out_dir = "artifacts/capacity"
+    for a in sys.argv[1:]:
+        if a.startswith("--out="):
+            out_dir = a.split("=", 1)[1]
+    if not HAVE_SCIPY:
+        print("FAIL: scipy unavailable — the LP edge cannot be checked "
+              "(capacity_edge would silently fall back to the closed form)")
+        return 1
+    failures: list = []
+    table = check_registry(failures)
+    check_exactness(failures)
+    warmup = check_auto_extend(failures)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "capacity_edges.json"), "w") as f:
+        json.dump({"M": CLUSTER.M, "K": CLUSTER.K, "T": T,
+                   "rates": list(RATES), "scenarios": table}, f, indent=1)
+    with open(os.path.join(out_dir, "warmup_report.json"), "w") as f:
+        json.dump(warmup, f, indent=1)
+    print(f"[capacity] wrote {out_dir}/capacity_edges.json and "
+          f"warmup_report.json", flush=True)
+    if failures:
+        print("\nFAILED capacity-edge checks:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("capacity-edge smoke: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

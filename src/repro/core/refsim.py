@@ -30,6 +30,10 @@ class RefResult:
     n_completed: int
     locality_fractions: np.ndarray
     sojourns: np.ndarray | None = None   # exact per-task sojourn slots
+    throughput: float = 0.0   # ALL completions per measured slot (incl.
+    #                           pre-warmup arrivals) — in overload this
+    #                           saturates at the capacity edge, the signal
+    #                           the brute-force LP oracle probes
 
 
 def _locality(cluster: Cluster, locals_: np.ndarray) -> np.ndarray:
@@ -45,8 +49,19 @@ def _locality(cluster: Cluster, locals_: np.ndarray) -> np.ndarray:
 def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
                     warmup: int, seed: int, d_rack: int = 0,
                     d_remote: int = 0, pod: bool = False,
-                    speed: np.ndarray | None = None) -> RefResult:
+                    speed: np.ndarray | None = None,
+                    placement: tuple | None = None) -> RefResult:
     """Balanced-Pandas (pod=False) or Balanced-Pandas-Pod (pod=True).
+
+    placement: optional ``(probs [C], locals [C, n_replicas])`` skewed
+    catalog (the scenario engine's Zipf/adversarial placement axis): each
+    arrival draws a chunk from ``probs`` and uses its fixed replica triple
+    instead of sampling servers uniformly.  ``lam`` stays
+    ``load * alpha * sum(local speed)`` — the FLEET edge — so probing
+    ``load`` above the fluid-LP edge over-drives the system and the
+    measured ``throughput`` saturates at the true (placement-aware)
+    capacity: the brute-force oracle tests/test_capacity.py checks the LP
+    against.  None keeps the historical uniform sampling bit-for-bit.
 
     speed: optional per-server speed multipliers (constant in time) — the
     heterogeneous-fleet model of repro.scenarios: [M] whole-server, or
@@ -82,11 +97,18 @@ def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
     start_cls_counts = np.zeros(3, np.int64)
     sum_N = 0.0
     n_slots_measured = 0
+    n_done_measured = 0
+    if placement is not None:
+        p_probs = np.asarray(placement[0], np.float64)
+        p_probs = p_probs / p_probs.sum()
+        p_locals = np.asarray(placement[1], np.int64)
 
     for t in range(T):
         # completions
         rem[busy] -= speed[np.arange(M), serving_cls][busy]
         done = busy & (rem <= 0)
+        if t >= warmup:
+            n_done_measured += int(done.sum())
         for m in np.where(done)[0]:
             if t >= warmup and started_at[m] >= warmup:
                 sojourns.append(t - started_at[m])
@@ -110,7 +132,11 @@ def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
 
         # arrivals
         for _ in range(rng.poisson(lam)):
-            locals_ = rng.choice(M, size=cluster.n_replicas, replace=False)
+            if placement is not None:
+                locals_ = p_locals[rng.choice(len(p_probs), p=p_probs)]
+            else:
+                locals_ = rng.choice(M, size=cluster.n_replicas,
+                                     replace=False)
             cls = _locality(cluster, locals_)
             W = (Q * inv_m_w).sum(axis=1)
             if pod:
@@ -146,4 +172,5 @@ def simulate_bp_ref(cluster: Cluster, rates: Rates, load: float, T: int,
         n_completed=len(sojourns),
         locality_fractions=start_cls_counts / max(start_cls_counts.sum(), 1),
         sojourns=np.asarray(sojourns, np.int64),
+        throughput=n_done_measured / max(n_slots_measured, 1),
     )

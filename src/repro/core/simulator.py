@@ -192,7 +192,12 @@ class SimResult(NamedTuple):
     utilization: jnp.ndarray
     locality_fractions: jnp.ndarray     # [3] of service starts
     routed_fractions: jnp.ndarray       # [3] of routing choices (BP family)
-    drift: jnp.ndarray                  # mean_N(2nd half) / mean_N(1st half)
+    drift: jnp.ndarray                  # mean_N(2nd half) / mean_N(1st half);
+    #                                     NaN when the 1st half saw no mass
+    #                                     (drift UNMEASURABLE — consumers must
+    #                                     treat NaN as "not converged", never
+    #                                     as "converged"; see telemetry.
+    #                                     export.auto_extend_warmup)
     clip_fraction: jnp.ndarray
     route_decisions: jnp.ndarray
     sched_decisions: jnp.ndarray
@@ -987,6 +992,41 @@ def simulate_with_telemetry(
     return summarize(sums, algo, cluster, rates, pod), tele
 
 
+def simulate_auto_warmup(
+        algo: str, cluster: Cluster, rates: Rates, load: float,
+        key: jax.Array, cfg: SimConfig = SimConfig(),
+        pod: Optional[PodSpec] = None, scenario=None, pad=None,
+        a_max: Optional[int] = None,
+        telemetry: tlm.TelemetryConfig = tlm.TelemetryConfig(),
+        policy=None):
+    """``simulate_with_telemetry`` + drift-aware auto-extend warmup.
+
+    Runs ONCE at full ``cfg.T``, then lets
+    ``telemetry.export.auto_extend_warmup`` push the measurement boundary
+    forward window-by-window until the windowed drift of the surviving
+    tail drops below ``policy.threshold`` (or the cap/min-tail guards
+    fire).  Window sums are exact per-slot sums, so the re-derived tail
+    statistics equal a run measured with the longer warmup — nothing is
+    re-run or retraced (the one-compile sweep invariant holds; a
+    fast-mixing run costs zero extensions).
+
+    Returns ``(SimResult, Telemetry, WarmupReport)``.  The SimResult is
+    the run's own (configured-warmup) summary — bit-identical to
+    ``simulate_with_telemetry``; the report carries the realized warmup,
+    convergence verdict, and the tail's mean_N / lam_hat /
+    mean_completion / throughput.  A NaN drift is reported as NOT
+    converged, loudly (see ``WarmupReport.note``)."""
+    from ..telemetry.export import WarmupPolicy, auto_extend_warmup
+    if policy is None:
+        policy = WarmupPolicy()
+    res, tele = simulate_with_telemetry(
+        algo, cluster, rates, load, key, cfg=cfg, pod=pod,
+        scenario=scenario, pad=pad, a_max=a_max, telemetry=telemetry)
+    report = auto_extend_warmup(tele, telemetry, cfg.T, cfg.warmup,
+                                policy=policy)
+    return res, tele, report
+
+
 def simulate_grid(algo: str, cluster: Cluster, rates: Rates, loads,
                   n_seeds: int, cfg: SimConfig = SimConfig(),
                   pod: Optional[PodSpec] = None, seed0: int = 0,
@@ -1201,7 +1241,14 @@ def summarize(s: RawSums, algo: str, cluster: Cluster, rates: Rates,
         utilization=s.busy / (slots * cluster.M),
         locality_fractions=s.starts / starts_total,
         routed_fractions=s.routed / routed_total,
-        drift=(s.sum_N_h2 / h) / jnp.maximum(s.sum_N_h1 / h, 1e-9),
+        # NaN-explicit: an empty first half (e.g. warmup >= T, or a system
+        # that never held a task) means drift is UNMEASURABLE — the old
+        # 1e-9 guard silently turned that into a huge finite ratio that
+        # drift<1.05 convergence checks mistook for "wildly diverging"
+        # (or, with sum_N_h2 also 0, for a perfectly-converged 0/1e-9=0)
+        drift=jnp.where(s.sum_N_h1 > 0,
+                        (s.sum_N_h2 / h) / jnp.maximum(s.sum_N_h1 / h, 1e-30),
+                        jnp.nan),
         clip_fraction=s.clipped / jnp.maximum(s.arrivals + s.clipped, 1.0),
         route_decisions=s.route_decisions,
         sched_decisions=s.sched_decisions,

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .spec import (
+    COMPOSE_DEPTH,
     SCENARIOS,
     FleetSpec,
     PlacementSpec,
@@ -123,9 +124,17 @@ class ScenarioPad(NamedTuple):
     n_epochs: int = 1
 
 
-def canonical_pad(cluster: "Cluster", scenarios=None) -> ScenarioPad:
-    """The registry-wide ScenarioPad (or for an explicit scenario subset)."""
-    n_windows, chunks_per_server, n_epochs = registry_limits(scenarios)
+def canonical_pad(cluster: "Cluster", scenarios=None,
+                  compose_depth: Optional[int] = None) -> ScenarioPad:
+    """The registry-wide ScenarioPad (or for an explicit scenario subset).
+
+    compose_depth widens the event-window budget for deeper-than-pairwise
+    ``compose()`` products (default: spec.COMPOSE_DEPTH = 2).  A 3-way
+    product of window-carrying scenarios overflows the default pad —
+    ``realize`` / ``stack_scenarios`` reject it with a ValueError naming
+    ``canonical_pad(..., compose_depth=3)`` as the fix."""
+    n_windows, chunks_per_server, n_epochs = registry_limits(
+        scenarios, compose_depth=compose_depth)
     return ScenarioPad(n_windows=max(n_windows, 1),
                        n_chunks=max(chunks_per_server * cluster.M, 1),
                        n_epochs=max(n_epochs, 1))
@@ -442,7 +451,9 @@ def stack_scenarios(scenarios, cluster: "Cluster", rates: "Rates", T: int,
             raise ValueError(
                 f"stack_scenarios: scenario {getattr(s, 'name', s)!r} does "
                 f"not realize to the shared canonical signature {pad} — "
-                "widen the pad (see canonical_pad / registry_limits)")
+                "widen the pad, e.g. canonical_pad(cluster, "
+                "compose_depth=3) for 3-way compose() products "
+                "(see registry_limits)")
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *scens)
     return stacked, np.asarray(caps, np.float64)
 
@@ -532,9 +543,11 @@ def realize(scenario: Scenario, cluster: "Cluster", rates: "Rates",
         if E > pad.n_windows:
             raise ValueError(
                 f"scenario {scenario.name!r} has {E} event windows but the "
-                f"pad reserves only {pad.n_windows}; widen the pad "
-                f"(canonical_pad sizes it over the registry, or "
-                f"pad._replace(n_windows=...))")
+                f"pad reserves only {pad.n_windows} (the default budget "
+                f"covers {COMPOSE_DEPTH}-way compose() products).  Widen "
+                f"it explicitly: canonical_pad(cluster, "
+                f"compose_depth={max(2, -(-E // max(pad.n_windows // COMPOSE_DEPTH, 1)))}) "
+                f"— or pad._replace(n_windows={E}) for a one-off")
         wstart = np.pad(wstart, (0, pad.n_windows - E))
         wend = np.pad(wend, (0, pad.n_windows - E))      # start == end: inert
         wmult = np.pad(wmult, ((0, pad.n_windows - E), (0, 0), (0, 0)),
@@ -558,5 +571,9 @@ def realize(scenario: Scenario, cluster: "Cluster", rates: "Rates",
         epoch_logits=epoch_logits,
         placement_epoch=placement_epoch,
     )
-    lam_cap = rates.alpha * cluster.M * capacity_scale(scen, T)
+    # placement-aware capacity edge: uniform placement keeps the closed
+    # form bit-for-bit; skewed catalogs get the fluid-LP optimum (local
+    # import — capacity.py imports capacity_scale from this module)
+    from .capacity import capacity_edge
+    lam_cap = capacity_edge(scen, cluster, rates, T)
     return scen, lam_cap

@@ -255,10 +255,12 @@ def compose(*scenarios, name: Optional[str] = None,
     benchmark ``--scenarios=`` filter accepts for ad-hoc compositions).
 
     Canonical-padding note: ``registry_limits`` reserves window slots for
-    compositions of up to two registry scenarios, so any pairwise
-    ``compose`` realizes to the registry's canonical pytree signature;
-    deeper ad-hoc products may need an explicit ``canonical_pad`` over the
-    composed specs.
+    compositions of up to two registry scenarios (``COMPOSE_DEPTH``), so
+    any pairwise ``compose`` realizes to the registry's canonical pytree
+    signature.  A 3+-way product of window-carrying scenarios can overflow
+    that budget; ``build.realize`` rejects it with a ValueError naming the
+    fix — realize with ``build.canonical_pad(cluster, compose_depth=3)``
+    (or more) to widen the shared signature for the whole sweep.
     """
     if not scenarios:
         raise ValueError("compose() needs at least one scenario")
@@ -281,7 +283,9 @@ def compose(*scenarios, name: Optional[str] = None,
 COMPOSE_DEPTH = 2   # pairwise compose() stays on the canonical signature
 
 
-def registry_limits(scenarios=None) -> tuple[int, int, int]:
+def registry_limits(scenarios=None,
+                    compose_depth: Optional[int] = None
+                    ) -> tuple[int, int, int]:
     """Registry-wide shape maxima for canonical pytree padding.
 
     Returns (max event-window count, max chunks_per_server among non-uniform
@@ -290,18 +294,25 @@ def registry_limits(scenarios=None) -> tuple[int, int, int]:
     shapes so every scenario realizes to the same pytree signature and the
     jit'd simulator compiles once for the whole sweep.
 
-    The window budget is ``COMPOSE_DEPTH`` x the largest single count, so a
-    ``compose()`` of up to that many registry scenarios — whose windows
-    union — still fits the canonical shapes (pads are inert rows; the cost
-    is a few extra [M, 3] multiplier rows per scenario).  Chunk catalogs
-    and churn epochs need no such headroom: placement merge is
-    rightmost-wins, never a union.  Epoch counts come from the duck-typed
-    ``n_epochs`` attribute trace-backed placements carry (synthetic
-    placements are single-epoch).
+    The window budget is ``compose_depth`` (default ``COMPOSE_DEPTH`` = 2)
+    x the largest single count, so a ``compose()`` of up to that many
+    registry scenarios — whose windows union — still fits the canonical
+    shapes (pads are inert rows; the cost is a few extra [M, 3] multiplier
+    rows per scenario).  A 3+-way product of window-carrying scenarios can
+    overflow the default budget; pass ``compose_depth=3`` (or more) here /
+    to ``build.canonical_pad`` to widen it — ``build.realize`` and
+    ``build.stack_scenarios`` name exactly that fix when they reject an
+    overflowing composition.  Chunk catalogs and churn epochs need no such
+    headroom: placement merge is rightmost-wins, never a union.  Epoch
+    counts come from the duck-typed ``n_epochs`` attribute trace-backed
+    placements carry (synthetic placements are single-epoch).
     """
     specs = tuple(get_scenario(s) for s in scenarios) \
         if scenarios is not None else tuple(SCENARIOS.values())
-    n_windows = COMPOSE_DEPTH * max(
+    depth = COMPOSE_DEPTH if compose_depth is None else int(compose_depth)
+    if depth < 1:
+        raise ValueError(f"compose_depth must be >= 1, got {depth}")
+    n_windows = depth * max(
         (len(s.fleet.windows) for s in specs), default=0)
     chunks = max((s.placement.chunks_per_server for s in specs
                   if s.placement.kind != "uniform"), default=0)

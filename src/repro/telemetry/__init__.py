@@ -73,13 +73,17 @@ from .collectors import (
 )
 from .export import (
     SCHEMA_VERSION,
+    WarmupPolicy,
+    WarmupReport,
     aggregate,
+    auto_extend_warmup,
     cell_view,
     format_clip_warning,
     probe_summary,
     read_jsonl,
     run_manifest,
     sojourn_percentiles,
+    tail_stats,
     to_events,
     validate_events,
     window_records,

@@ -23,9 +23,11 @@ benchmark's --metrics-out output via scripts/validate_telemetry.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import math
 import os
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import numpy as np
 
@@ -152,7 +154,12 @@ def windowed_drift(tele: Telemetry, tcfg: TelemetryConfig, T: int,
     post-warmup windows divided by the first quarter.  ~1 means the chain
     mixed; >> 1 means still growing (slow mixing or supercritical) — the
     windowed upgrade of SimResult.drift's single half2/half1 ratio, and
-    the signal ROADMAP's auto-extend warmup will consume."""
+    the signal ``auto_extend_warmup`` consumes.
+
+    Returns NaN when fewer than 2 measured windows remain after ``warmup``
+    — drift is then UNMEASURABLE, and consumers must treat that as "not
+    converged / extend", never as "converged" (the auto-extend loop and
+    the benchmark tables both guard this)."""
     tele = aggregate(tele)
     win = np.asarray(tele.win, np.float64)
     wl = tcfg.window_len(T)
@@ -165,6 +172,164 @@ def windowed_drift(tele: Telemetry, tcfg: TelemetryConfig, T: int,
     k = max(1, len(meas) // 4)
     head, tail = mean_N[:k].mean(), mean_N[-k:].mean()
     return float(tail / max(head, 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# Drift-aware auto-extend warmup (ROADMAP: slow-mixing scenarios must
+# converge before measurement).  Window sums are EXACT per-slot sums, so
+# moving the measurement boundary to a later window boundary and re-deriving
+# the tail statistics is equivalent to having run with that longer warmup —
+# no re-run, no retrace, the one-compile sweep invariant holds trivially.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmupPolicy:
+    """Knobs of the auto-extend warmup loop (``auto_extend_warmup``).
+
+    threshold        converged when windowed drift < this (1.05 = the last
+                     quarter of measured windows is within 5% of the first)
+    chunk_windows    extend the warmup boundary by this many telemetry
+                     windows per step
+    max_warmup_frac  hard cap: never push warmup past this fraction of T
+                     (measurement needs a tail; past the cap the honest
+                     answer is "lengthen the run", not "trim harder")
+    min_tail_windows stop extending when fewer measured windows than this
+                     would remain (a 2-window drift estimate is noise)
+    """
+
+    threshold: float = 1.05
+    chunk_windows: int = 2
+    max_warmup_frac: float = 0.75
+    min_tail_windows: int = 4
+
+
+class WarmupReport(NamedTuple):
+    """Outcome of one auto-extend warmup pass (``auto_extend_warmup``).
+
+    ``warmup`` is the REALIZED measurement boundary (slots; recorded in
+    benchmark rows and JSONL manifests), ``drift`` the windowed drift of
+    the surviving tail, and the trailing fields the tail's re-derived
+    metrics (means over the post-``warmup`` windows; ``mean_completion``
+    is Little's-law slots).  ``converged`` is False whenever drift is NaN
+    (unmeasurable — never treated as converged) or still >= threshold at
+    the cap; ``note`` then says why, loudly."""
+
+    warmup0: int
+    warmup: int
+    extensions: int
+    converged: bool
+    drift0: float
+    drift: float
+    threshold: float
+    mean_N: float
+    lam_hat: float
+    mean_completion: float
+    throughput: float
+    note: str = ""
+
+    def fields(self) -> dict:
+        """Manifest/benchmark-row fields (JSON-safe floats)."""
+        return {
+            "warmup0": self.warmup0,
+            "warmup_realized": self.warmup,
+            "warmup_extensions": self.extensions,
+            "warmup_converged": self.converged,
+            "drift_windowed0": float(self.drift0),
+            "drift_windowed": float(self.drift),
+            "drift_threshold": float(self.threshold),
+            **({"warmup_note": self.note} if self.note else {}),
+        }
+
+
+def tail_stats(tele: Telemetry, tcfg: TelemetryConfig, T: int,
+               warmup: int) -> dict:
+    """Re-derive run metrics from the telemetry windows at/after the
+    ``warmup`` boundary (exact: window sums are per-slot sums, so this
+    equals a run measured with that warmup up to window granularity).
+    Returns mean_N / lam_hat / mean_completion (Little's law, slots) /
+    throughput — NaN-filled when no measured window survives."""
+    tele = aggregate(tele)
+    win = np.asarray(tele.win, np.float64)
+    wl = tcfg.window_len(T)
+    w0 = -(-int(warmup) // wl)
+    tail = win[w0:]
+    slots = float(tail[:, _S["slots"]].sum())
+    if slots <= 0:
+        nan = float("nan")
+        return {"mean_N": nan, "lam_hat": nan, "mean_completion": nan,
+                "throughput": nan}
+    mean_N = float(tail[:, _S["sum_N"]].sum()) / slots
+    lam_hat = float(tail[:, _S["arrivals"]].sum()) / slots
+    return {
+        "mean_N": mean_N,
+        "lam_hat": lam_hat,
+        "mean_completion": mean_N / max(lam_hat, 1e-9),
+        "throughput": float(tail[:, _S["completions"]].sum()) / slots,
+    }
+
+
+def auto_extend_warmup(tele: Telemetry, tcfg: TelemetryConfig, T: int,
+                       warmup: int,
+                       policy: WarmupPolicy = WarmupPolicy()
+                       ) -> WarmupReport:
+    """The drift-aware warmup control loop (ROADMAP auto-extend).
+
+    Starting from the run's configured ``warmup``, extend the measurement
+    boundary in chunks of ``policy.chunk_windows`` telemetry windows while
+    the windowed drift of the remaining tail is >= ``policy.threshold``,
+    stopping at the ``max_warmup_frac`` cap or when the surviving tail
+    gets too short to judge (``min_tail_windows``).  A NaN drift
+    (unmeasurable: < 2 measured windows) is NEVER treated as converged —
+    the report comes back converged=False with a loud note.
+
+    Works on collected window sums only — the simulation is not re-run and
+    nothing retraces, so a fast-mixing run (drift already below threshold)
+    costs zero extensions and a sweep's trace_count stays at 1.  Use
+    ``core.simulate_auto_warmup`` for the one-call version.
+    """
+    tele = aggregate(tele)
+    wl = tcfg.window_len(T)
+    cap = int(policy.max_warmup_frac * T)
+    win = np.asarray(tele.win, np.float64)
+    measured_after = lambda w: int(  # noqa: E731
+        (win[-(-int(w) // wl):, _S["slots"]] > 0).sum())
+    w = int(warmup)
+    drift0 = windowed_drift(tele, tcfg, T, w)
+    drift = drift0
+    extensions = 0
+    note = ""
+    while not math.isnan(drift) and drift >= policy.threshold:
+        nxt = w + policy.chunk_windows * wl
+        if nxt > cap:
+            note = (f"NOT converged: drift {drift:.3f} >= "
+                    f"{policy.threshold} at the warmup cap ({cap} slots = "
+                    f"{policy.max_warmup_frac:.0%} of T) — lengthen the "
+                    "run (larger T), the tail cannot be trimmed further")
+            break
+        if measured_after(nxt) < policy.min_tail_windows:
+            note = (f"NOT converged: drift {drift:.3f} >= "
+                    f"{policy.threshold} but only "
+                    f"{measured_after(nxt)} measured windows would remain "
+                    f"(< min_tail_windows={policy.min_tail_windows}) — "
+                    "lengthen the run (larger T)")
+            break
+        w = nxt
+        extensions += 1
+        drift = windowed_drift(tele, tcfg, T, w)
+    if math.isnan(drift):
+        converged = False
+        if not note:
+            note = ("drift UNMEASURABLE (fewer than 2 measured telemetry "
+                    "windows after warmup) — treated as NOT converged; "
+                    "lengthen the run or use more telemetry windows")
+    else:
+        converged = bool(drift < policy.threshold)
+    return WarmupReport(
+        warmup0=int(warmup), warmup=w, extensions=extensions,
+        converged=converged, drift0=float(drift0), drift=float(drift),
+        threshold=float(policy.threshold), note=note,
+        **tail_stats(tele, tcfg, T, w))
 
 
 # ---------------------------------------------------------------------------

@@ -469,7 +469,11 @@ def test_compose_merges_every_axis():
     assert scen.chunk_locals is not None
     R = CLUSTER.rack_size
     want_scale = (0.5 * R + (CLUSTER.M - R)) / CLUSTER.M
-    assert lam_cap == pytest.approx(RATES.alpha * CLUSTER.M * want_scale)
+    closed = RATES.alpha * CLUSTER.M * want_scale
+    # the composition carries zipf_hotspot's skewed catalog, so lam_cap is
+    # the fluid-LP edge: at most the fleet-only closed form, and strictly
+    # below it when the hot chunks' local tier binds (which it does here)
+    assert 0 < lam_cap < closed
 
     # persistent speeds multiply elementwise on double composition
     cc = compose("slow_rack", "slow_rack")
